@@ -1,0 +1,103 @@
+"""Assemble EXPERIMENTS.md from recorded artifacts.
+
+Reads ``experiments/dryrun/*.json`` + ``experiments/digits/*.csv`` and
+regenerates the §Dry-run and §Roofline tables.  §Paper-validation and
+§Perf carry curated narrative with numbers cited from the artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for p in sorted(glob.glob(f"experiments/dryrun/*__{mesh}.json")):
+        if p.count("__") > 2:      # variant files handled in §Perf
+            continue
+        r = json.load(open(p))
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        pd = r["per_device"]
+        ops = {k: v["count"] for k, v in r["collectives"].items() if v["count"]}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.1f} | "
+            f"{pd['peak_bytes_est']/2**30:.2f} | {pd['flops']:.3g} | "
+            f"{'; '.join(f'{k}×{v}' for k, v in sorted(ops.items()))} |")
+    hdr = ("| arch | shape | compile | s | peak GiB/dev | HLO flops/dev† | "
+           "collective ops |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def digits_summary() -> str:
+    out = []
+    for p in sorted(glob.glob("experiments/digits/*.csv")):
+        m = os.path.basename(p)[:-4]
+        d = np.genfromtxt(p, delimiter=",", names=True)
+        acc, bits = d["accuracy"], d["cum_bits"]
+        wall, en = d["cum_wall_s"], d["cum_energy_j"]
+
+        def at(budget, arr):
+            i = np.searchsorted(arr, budget, side="right") - 1
+            return acc[i] * 100 if i >= 0 else 0.0
+
+        out.append(f"| {m} | {acc[-1]*100:.2f} | {bits[-1]:.3g} | "
+                   f"{at(1e6, bits):.2f} | {at(1250, wall):.2f} | "
+                   f"{at(50, en):.2f} |")
+    hdr = ("| method | final acc % | total bits | acc@10⁶ bits % | "
+           "acc@1250 s % | acc@50 J % |\n|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(out)
+
+
+def main():
+    from repro.launch.roofline import full_table, markdown_table, what_moves_it
+
+    print(open("benchmarks/EXPERIMENTS_header.md").read())
+
+    print("\n## §Paper-validation — digits experiment (Figs 2–6)\n")
+    print("K=1500 rounds, N=20 clients, S=5 local steps, α=0.003, batch 32, "
+          "0.1 Mbps uplink, P_tx=2 W, 3 runs averaged "
+          "(`examples/fedscalar_digits.py`).\n")
+    print(digits_summary())
+    print(open("benchmarks/EXPERIMENTS_validation_notes.md").read())
+
+    print("\n## §Dry-run — single pod 16×16 (256 chips)\n")
+    print("† XLA cost analysis counts while-loop bodies once (measured "
+          "artifact) — scanned stacks are undercounted; the §Roofline "
+          "analytic model carries the trip counts. Decode rows are "
+          "unrolled and fully counted.\n")
+    print(dryrun_table("pod16x16"))
+    print("\n## §Dry-run — multi-pod 2×16×16 (512 chips)\n")
+    print(dryrun_table("pod2x16x16"))
+
+    print("\n## §Roofline — analytic three-term model, zero3 baseline, "
+          "single pod\n")
+    print("compute = FLOPs/dev ÷ 197 TF/s; memory = HBM bytes/dev ÷ 819 GB/s; "
+          "collective = ICI bytes/dev ÷ 50 GB/s (ring factor on all-reduce). "
+          "Full per-component breakdown: "
+          "`python -m repro.launch.roofline [--layout tp]`.\n")
+    rows = full_table()
+    print(markdown_table(rows))
+    print("\n### Dominant-term diagnosis (one sentence per combo)\n")
+    for r in rows:
+        print(f"* **{r['arch']} × {r['shape']}** → {what_moves_it(r)}")
+
+    print("\n## §Roofline — multi-pod 2×16×16 (512 chips), zero3 baseline\n")
+    print("The pod axis doubles the data-parallel extent (batch over "
+          "('pod','data')); per-device compute halves for batch-shardable "
+          "shapes while the ZeRO-3 gather and MoE a2a terms are unchanged "
+          "per device — collective dominance deepens, matching the "
+          "single-pod diagnosis.\n")
+    print(markdown_table(full_table(mesh="pod2x16x16")))
+
+    print(open("benchmarks/EXPERIMENTS_perf.md").read())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""FedScalar reproduction: scalar-communication FL as a JAX framework.
+
+See README.md for the map; DESIGN.md for the paper→TPU adaptation;
+EXPERIMENTS.md for validation, dry-run, roofline and perf logs.
+"""
+__version__ = "1.0.0"

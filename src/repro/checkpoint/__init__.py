@@ -1,0 +1,4 @@
+"""Checkpointing: msgpack + raw numpy buffers, sharding-aware restore."""
+from repro.checkpoint.msgpack_ckpt import save_checkpoint, restore_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]

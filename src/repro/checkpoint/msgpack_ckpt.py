@@ -1,0 +1,83 @@
+"""Minimal dependency-free checkpointing (msgpack envelope + npy blobs).
+
+Layout on disk::
+
+    <dir>/manifest.msgpack   — treedef paths, shapes, dtypes, step, meta
+    <dir>/arrays.npz         — one entry per leaf (flattened path key)
+
+Arrays are gathered to host before save (fine at the reduced/test scale;
+a production TPU deployment would use per-shard files — the manifest
+format already records shapes/dtypes per path so that extension is
+additive).  ``restore_checkpoint`` can re-shard: pass ``shardings`` with
+the same treedef and each leaf is device_put with its NamedSharding.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]
+
+_SEP = "||"
+
+
+def _flatten_with_paths(tree: Any):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, tree: Any, step: int = 0,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    manifest = {
+        "step": step,
+        "metadata": metadata or {},
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+    }
+    with open(os.path.join(directory, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    np.savez(os.path.join(directory, "arrays.npz"),
+             **{k: a for k, a in arrays.items()})
+    return directory
+
+
+def restore_checkpoint(directory: str, like: Any,
+                       shardings: Any = None) -> tuple:
+    """→ (tree shaped like ``like``, step, metadata)."""
+    with open(os.path.join(directory, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}…")
+    flat_sh = _flatten_with_paths(shardings) if shardings is not None else {}
+    restored = {}
+    for key, ref in flat_like.items():
+        arr = data[key]
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {ref.shape}")
+        if key in flat_sh:
+            restored[key] = jax.device_put(arr, flat_sh[key])
+        else:
+            restored[key] = jax.numpy.asarray(arr, dtype=ref.dtype)
+    # rebuild the pytree in `like`'s structure
+    paths = [
+        _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        for p, _ in jax.tree_util.tree_leaves_with_path(like)
+    ]
+    leaves = [restored[p] for p in paths]
+    treedef = jax.tree_util.tree_structure(like)
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            manifest["step"], manifest["metadata"])

@@ -1,0 +1,15 @@
+"""The paper's own evaluation model: 64-24-12-10 MLP, d≈2000 (§III)."""
+from repro.models.config import ModelConfig
+
+# Represented via ModelConfig for registry uniformity; the digits
+# pipeline uses repro.models.mlp_classifier directly.
+CONFIG = ModelConfig(
+    name="paper-mlp",
+    arch_type="mlp",
+    num_layers=2,
+    d_model=24,
+    vocab_size=10,
+    use_rope=False,
+    dtype="float32",
+    source="FedScalar §III",
+)

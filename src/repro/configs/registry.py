@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig / Arch."""
+from __future__ import annotations
+
+from repro.models.api import Arch
+from repro.models.config import ModelConfig
+
+from repro.configs import (
+    falcon_mamba_7b,
+    granite_8b,
+    jamba_v0_1_52b,
+    minitron_8b,
+    paligemma_3b,
+    qwen1_5_4b,
+    qwen3_moe_235b_a22b,
+    qwen3_moe_30b_a3b,
+    smollm_360m,
+    whisper_tiny,
+)
+
+CONFIGS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        whisper_tiny,
+        qwen3_moe_30b_a3b,
+        qwen3_moe_235b_a22b,
+        paligemma_3b,
+        qwen1_5_4b,
+        falcon_mamba_7b,
+        granite_8b,
+        minitron_8b,
+        smollm_360m,
+        jamba_v0_1_52b,
+    )
+}
+
+ARCH_IDS = tuple(CONFIGS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def get_arch(name: str, reduced: bool = False) -> Arch:
+    cfg = get_config(name)
+    if reduced:
+        cfg = cfg.reduced()
+    return Arch(cfg)

@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — scalar-communication FL.
+
+* :mod:`repro.core.prng` — counter-based seeded PRNG (shard-parallel,
+  Pallas-compatible) for the projection vectors v(ξ).
+* :mod:`repro.core.projection` — encode ⟨δ, v⟩ / decode r·v, plus
+  multi-projection and block-sketch extensions.
+* :mod:`repro.core.fedscalar` — Algorithm 1 rounds.
+* :mod:`repro.core.fedavg`, :mod:`repro.core.qsgd` — the paper's
+  baselines.
+"""
+from repro.core.prng import Distribution
+from repro.core.projection import ProjectionMode, project_tree, reconstruct_tree
+from repro.core.fedscalar import FedScalarConfig, fedscalar_round
+from repro.core.fedavg import FedAvgConfig, fedavg_round
+from repro.core.qsgd import QSGDConfig, qsgd_round
+
+__all__ = [
+    "Distribution",
+    "ProjectionMode",
+    "project_tree",
+    "reconstruct_tree",
+    "FedScalarConfig",
+    "fedscalar_round",
+    "FedAvgConfig",
+    "fedavg_round",
+    "QSGDConfig",
+    "qsgd_round",
+]

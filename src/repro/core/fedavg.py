@@ -1,0 +1,49 @@
+"""FedAvg baseline (McMahan et al., 2017) — the paper's main comparison.
+
+Same ClientStage as FedScalar (S local SGD steps), but each client
+uploads its full d-dimensional update δₙ; the server averages them.
+Upload cost: d × 32 bits per client per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedscalar import make_local_sgd
+from repro.core.projection import tree_size
+
+__all__ = ["FedAvgConfig", "fedavg_round", "upload_bits_per_client"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgConfig:
+    local_steps: int = 5
+    local_lr: float = 3e-3
+    server_lr: float = 1.0
+    value_bits: int = 32
+
+
+def fedavg_round(
+    params: Any,
+    client_batches: Any,   # leading axes (N, S, ...)
+    round_idx,
+    grad_fn: Callable,
+    cfg: FedAvgConfig,
+):
+    del round_idx
+    local = make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
+    deltas = jax.vmap(local, in_axes=(None, 0))(params, client_batches)
+    mean_delta = jax.tree_util.tree_map(
+        lambda d: jnp.mean(d.astype(jnp.float32), axis=0), deltas
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: (p + cfg.server_lr * g).astype(p.dtype), params, mean_delta
+    )
+    return new_params, {}
+
+
+def upload_bits_per_client(params: Any, cfg: FedAvgConfig) -> int:
+    return tree_size(params) * cfg.value_bits

@@ -1,0 +1,213 @@
+"""FedScalar protocol (Algorithm 1 of the paper), as jit-able JAX.
+
+One communication round:
+
+  server broadcasts x_k
+  each client n:   ψ₀ = x_k;  S local SGD steps;  δₙ = ψ_S − ψ₀
+                   rₙ = ⟨δₙ, v(ξₙ)⟩          ── uploads (rₙ, ξₙ): 2 scalars
+  server:          ĝ = (1/N) Σₙ rₙ·v(ξₙ)     ── regenerated from seeds
+                   x_{k+1} = x_k + ĝ
+
+The functions here are pure and shape-polymorphic; the small-scale
+simulation (`repro.fed.simulation`) vmaps over clients, while the
+mesh-parallel production path (`repro.launch.train`) maps clients onto
+the mesh's data axis and reuses the same building blocks.
+
+Beyond-paper options (all default to the paper's behavior):
+
+* ``num_projections`` / ``mode`` — multi-projection & block sketches
+  (see :mod:`repro.core.projection`).
+* ``error_feedback`` — clients keep the compression residual
+  e ← (δ + e) − ⟨δ + e, v⟩v locally and re-inject it next round
+  (EF-SGD style memory; upload cost unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prng import Distribution
+from repro.core.projection import (
+    ProjectionMode,
+    project_tree,
+    reconstruct_tree,
+    tree_size,
+)
+
+__all__ = [
+    "FedScalarConfig",
+    "make_local_sgd",
+    "client_stage",
+    "server_aggregate",
+    "fedscalar_round",
+    "round_seeds",
+    "upload_bits_per_client",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedScalarConfig:
+    """Hyper-parameters of Algorithm 1 (+ beyond-paper extensions)."""
+
+    local_steps: int = 5                 # S
+    local_lr: float = 3e-3               # α
+    server_lr: float = 1.0               # paper uses 1.0 (x_{k+1} = x_k + ĝ)
+    distribution: Distribution = Distribution.RADEMACHER
+    num_projections: int = 1             # m  (paper: 1; m>1 = future-work variant)
+    mode: ProjectionMode = ProjectionMode.FULL
+    error_feedback: bool = False         # beyond-paper EF memory
+    scalar_bits: int = 32                # wire width of r and ξ
+
+
+def round_seeds(round_idx: int, num_clients: int, salt: int = 0x5EED) -> jax.Array:
+    """Deterministic per-(round, client) 32-bit seeds ξ_{k,n}.
+
+    In a real deployment each client draws ξ locally and uploads it;
+    for reproducible simulation we derive it from (k, n).
+    """
+    k = jnp.uint32(round_idx)
+    n = jnp.arange(num_clients, dtype=jnp.uint32)
+    # splitmix-style fold; avoids collisions across rounds/clients.
+    x = (k * jnp.uint32(0x9E3779B9)) ^ (n * jnp.uint32(0x85EBCA6B)) ^ jnp.uint32(salt)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x21F0AAAD)
+    x = x ^ (x >> 15)
+    return x
+
+
+def make_local_sgd(
+    grad_fn: Callable[[Any, Any], Any],
+    lr: float,
+    steps: int,
+) -> Callable[[Any, Any], Any]:
+    """ClientStage lines 16–21: S plain-SGD steps, returns δ = ψ_S − ψ₀.
+
+    ``grad_fn(params, batch) -> grad_tree``;  ``batches`` is a pytree of
+    arrays with a leading ``steps`` axis (one slice per local step).
+    """
+
+    def local(params, batches):
+        def step(p, batch):
+            g = grad_fn(p, batch)
+            p = jax.tree_util.tree_map(lambda w, gg: w - lr * gg.astype(w.dtype), p, g)
+            return p, None
+
+        p_final, _ = jax.lax.scan(step, params, batches, length=steps)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, p_final, params)
+        return delta
+
+    return local
+
+
+def client_stage(
+    delta: Any,
+    seed,
+    cfg: FedScalarConfig,
+    ef_state: Any | None = None,
+):
+    """Encode a local update to scalars (lines 21–23).
+
+    Returns ``(r, new_ef_state)``; ``r`` has shape ``(num_projections,)``.
+
+    Error-feedback mode (beyond paper) switches the compressor to its
+    **contractive** form C(x) = (⟨x,v⟩/‖v‖²)·v — the orthogonal
+    projection onto v, with E‖x−C(x)‖² = (1−1/d)‖x‖².  EF theory
+    requires a contraction; with the paper's *unbiased* ⟨x,v⟩·v the
+    residual grows ~d per round and training diverges (verified
+    empirically — see tests).  The uploaded payload is unchanged (one
+    scalar: r/‖v‖², plus the seed); the server applies it directly.
+    """
+    if cfg.error_feedback:
+        assert ef_state is not None
+        delta = jax.tree_util.tree_map(lambda d, e: d + e.astype(d.dtype), delta, ef_state)
+    r = project_tree(delta, seed, cfg.distribution, cfg.num_projections, cfg.mode)
+    if cfg.error_feedback:
+        d_total = tree_size(delta)
+        # Rademacher: ‖v‖² = d exactly; Gaussian: E‖v‖² = d.
+        r = r / d_total
+        rec = reconstruct_tree(
+            delta, seed, r, cfg.distribution, cfg.num_projections, cfg.mode
+        )
+        new_ef = jax.tree_util.tree_map(
+            lambda d_, h: (d_ - h).astype(jnp.float32), delta, rec
+        )
+        return r, new_ef
+    return r, ef_state
+
+
+def server_aggregate(
+    params: Any,
+    rs: jax.Array,       # (N, num_projections)
+    seeds: jax.Array,    # (N,)
+    cfg: FedScalarConfig,
+) -> Any:
+    """Lines 7–13: regenerate each vₙ from ξₙ, form ĝ, update x.
+
+    Uses a fori_loop accumulation so peak memory is O(d), not O(N·d)
+    (v is regenerated per client, never batched).
+    """
+    n = rs.shape[0]
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(i, acc):
+        rec = reconstruct_tree(
+            params, seeds[i], rs[i], cfg.distribution, cfg.num_projections, cfg.mode
+        )
+        return jax.tree_util.tree_map(lambda a, r_: a + r_.astype(jnp.float32), acc, rec)
+
+    total = jax.lax.fori_loop(0, n, body, zeros)
+    ghat = jax.tree_util.tree_map(lambda t: t / n, total)
+    return jax.tree_util.tree_map(
+        lambda p, g: (p + cfg.server_lr * g).astype(p.dtype), params, ghat
+    )
+
+
+def fedscalar_round(
+    params: Any,
+    client_batches: Any,   # pytree, leading axes (N, S, ...)
+    round_idx,
+    grad_fn: Callable,
+    cfg: FedScalarConfig,
+    ef_states: Any | None = None,
+):
+    """One full FedScalar round over N explicit clients (vmapped).
+
+    Returns ``(new_params, aux)`` where aux carries the uploaded scalars
+    (for variance instrumentation) and the new EF states.
+    """
+    n_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+    seeds = round_seeds(round_idx, n_clients)
+    local = make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
+    deltas = jax.vmap(local, in_axes=(None, 0))(params, client_batches)
+
+    def encode(delta, seed, ef):
+        return client_stage(delta, seed, cfg, ef)
+
+    if cfg.error_feedback:
+        rs, new_ef = jax.vmap(encode, in_axes=(0, 0, 0))(deltas, seeds, ef_states)
+    else:
+        rs, _ = jax.vmap(lambda d, s: client_stage(d, s, cfg))(deltas, seeds)
+        new_ef = ef_states
+
+    new_params = server_aggregate(params, rs, seeds, cfg)
+    aux = {"r": rs, "seeds": seeds, "deltas_sqnorm": _sqnorms(deltas)}
+    return new_params, (aux, new_ef)
+
+
+def _sqnorms(deltas: Any) -> jax.Array:
+    """Per-client ‖δₙ‖² (leading client axis), for Prop. 2.1 instrumentation."""
+    leaves = jax.tree_util.tree_leaves(deltas)
+    n = leaves[0].shape[0]
+    acc = jnp.zeros((n,), jnp.float32)
+    for l in leaves:
+        acc = acc + jnp.sum(l.astype(jnp.float32).reshape(n, -1) ** 2, axis=1)
+    return acc
+
+
+def upload_bits_per_client(params: Any, cfg: FedScalarConfig) -> int:
+    """Uplink payload per client per round: (m scalars + 1 seed) × width."""
+    del params  # dimension-independent — the whole point of the paper
+    return (cfg.num_projections + 1) * cfg.scalar_bits

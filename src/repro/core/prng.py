@@ -1,0 +1,247 @@
+"""Counter-based PRNG for seeded random-projection vectors.
+
+FedScalar's wire format is ``(r, seed)``: the server must regenerate the
+*identical* random vector ``v`` that the client used, from the 32-bit
+seed alone.  Three constraints drive the design of this module:
+
+1. **Shard-parallel generation.**  ``v`` lives sharded over the model
+   axis of a TPU mesh; every shard must generate exactly its slice with
+   no communication.  So ``v[i]`` must be a pure function of
+   ``(seed, i)`` for a *global* element index ``i`` — a counter-based
+   generator, not a sequential stream.
+2. **Pallas-kernel compatibility.**  ``jax.random`` (Threefry) cannot be
+   called inside a Pallas TPU kernel, and ``pltpu.prng_random_bits`` is
+   a hardware PRNG whose stream differs between interpret mode and
+   silicon (and is an all-zeros stub in interpret mode).  The generator
+   here is a handful of uint32 multiply/xor/shift ops, legal in a
+   kernel body and bit-identical in pure jnp.
+3. **No 64-bit requirement.**  Model dimension d reaches 2.35e11
+   (qwen3-moe-235b), beyond uint32.  Indices are decomposed as
+   ``i = hi * 2**16 + lo`` with ``hi < 2**32`` (valid to d < 2**48),
+   so all arithmetic stays in uint32 and works with x64 disabled.
+
+The mixer is SplitMix32 (Steele et al. finalizer constants as improved
+by the low-bias search of Hash Prospector), applied in a chain over
+``(seed, tag, hi, lo)``.  Statistical quality (mean / variance / fourth
+moment / bit balance / cross-seed decorrelation) is asserted in
+``tests/test_prng.py``.
+
+Distributions:
+
+* ``rademacher`` — exact ±1, E[v]=0, E[v²]=1, E[v⁴]=1 (Prop. 2.1's
+  low-variance choice).
+* ``gaussian``  — Box–Muller on two hash uniforms; E[v]=0, E[v²]=1,
+  E[v⁴]=3 (the paper's baseline N(0, I) choice).
+"""
+from __future__ import annotations
+
+import enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Distribution",
+    "splitmix32",
+    "hash_u32",
+    "uniform01",
+    "rademacher_flat",
+    "gaussian_flat",
+    "random_flat",
+    "random_like",
+]
+
+# Stream tags keep independent substreams (e.g. the two uniforms of a
+# Box–Muller pair) decorrelated under the same (seed, index).
+_TAG_U1 = 0x9E3779B9  # golden-ratio constant
+_TAG_U2 = 0x85EBCA6B
+
+# Logical sub-block width for the (hi, lo) index split.  16 bits keeps
+# `hi` within uint32 up to d = 2**48 and makes the split cheap in both
+# jnp and Pallas (shift/mask only).
+INDEX_LO_BITS = 16
+INDEX_LO_MASK = (1 << INDEX_LO_BITS) - 1
+
+
+class Distribution(enum.Enum):
+    """Sampling distribution for the projection vector v (paper §II-A)."""
+
+    GAUSSIAN = "gaussian"
+    RADEMACHER = "rademacher"
+
+
+def _u32(x) -> jax.Array:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def splitmix32(x: jax.Array) -> jax.Array:
+    """SplitMix32 finalizer: a full-avalanche 32-bit mixer.
+
+    uint32 multiplication in XLA wraps mod 2**32, which is exactly the
+    semantics the mixer needs.
+    """
+    x = _u32(x)
+    x = x + _u32(0x9E3779B9)
+    x = x ^ (x >> 16)
+    x = x * _u32(0x21F0AAAD)
+    x = x ^ (x >> 15)
+    x = x * _u32(0x735A2D97)
+    x = x ^ (x >> 15)
+    return x
+
+
+def hash_u32(seed, hi, lo, tag: int = 0) -> jax.Array:
+    """Hash ``(seed, tag, hi, lo)`` to decorrelated uint32 bits.
+
+    ``seed``/``hi``/``lo`` broadcast against each other; all are taken
+    mod 2**32.  Chained SplitMix32 gives avalanche across every input
+    word — sequential ``lo`` values (the common access pattern) produce
+    independent-looking outputs.
+    """
+    h = splitmix32(_u32(seed) ^ _u32(tag))
+    h = splitmix32(h ^ _u32(hi))
+    h = splitmix32(h ^ _u32(lo))
+    return h
+
+
+def _split_index(base: int, n: int):
+    """(hi, lo) uint32 arrays for global indices ``base + [0, n)``.
+
+    ``base`` is a Python int (may exceed 2**32); the carry from the low
+    16-bit word is handled explicitly so everything stays uint32.
+    """
+    if base < 0:
+        raise ValueError(f"negative base offset: {base}")
+    off = jnp.arange(n, dtype=jnp.uint32)
+    base_lo = base & INDEX_LO_MASK
+    base_hi = base >> INDEX_LO_BITS
+    lo_sum = _u32(base_lo) + (off & _u32(INDEX_LO_MASK))  # < 2**17, no wrap
+    carry = lo_sum >> INDEX_LO_BITS
+    lo = lo_sum & _u32(INDEX_LO_MASK)
+    hi = _u32(base_hi & 0xFFFFFFFF) + (off >> INDEX_LO_BITS) + carry
+    return hi, lo
+
+
+def uniform01(bits: jax.Array) -> jax.Array:
+    """Map uint32 bits to a float32 uniform in the open interval (0, 1].
+
+    The +1 offset excludes exact zero so ``log(u)`` in Box–Muller is
+    finite.
+    """
+    return (bits.astype(jnp.float32) + 1.0) * jnp.float32(2.0**-32)
+
+
+def rademacher_flat(seed, base: int, n: int, dtype=jnp.float32) -> jax.Array:
+    """±1 Rademacher vector for global indices ``base + [0, n)``."""
+    hi, lo = _split_index(base, n)
+    bits = hash_u32(seed, hi, lo, tag=_TAG_U1)
+    # Bit 8 of a full-avalanche hash; any fixed bit works.
+    sign_bit = (bits >> 8) & _u32(1)
+    return jnp.where(sign_bit == 1, 1.0, -1.0).astype(dtype)
+
+
+def gaussian_flat(seed, base: int, n: int, dtype=jnp.float32) -> jax.Array:
+    """N(0, 1) vector via Box–Muller for global indices ``base + [0, n)``."""
+    hi, lo = _split_index(base, n)
+    u1 = uniform01(hash_u32(seed, hi, lo, tag=_TAG_U1))
+    u2 = uniform01(hash_u32(seed, hi, lo, tag=_TAG_U2))
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    z = r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)
+    return z.astype(dtype)
+
+
+def random_flat(
+    seed,
+    base: int,
+    n: int,
+    distribution: Distribution = Distribution.RADEMACHER,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Dispatch on the projection distribution (paper §II-A)."""
+    if distribution == Distribution.RADEMACHER:
+        return rademacher_flat(seed, base, n, dtype=dtype)
+    if distribution == Distribution.GAUSSIAN:
+        return gaussian_flat(seed, base, n, dtype=dtype)
+    raise ValueError(f"unknown distribution: {distribution}")
+
+
+def random_like(
+    leaf: jax.Array,
+    seed,
+    base: int,
+    distribution: Distribution = Distribution.RADEMACHER,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Random vector with ``leaf``'s shape, indexed by global flat offsets.
+
+    Small-model path (d < 2**31 per leaf): 1-D iota + reshape.  For the
+    sharded big-model path use :func:`random_for_shape`, whose (row, col)
+    indexing partitions elementwise under pjit without a flat reshape.
+    """
+    n = leaf.size
+    flat = random_flat(seed, base, n, distribution=distribution, dtype=dtype)
+    return flat.reshape(leaf.shape)
+
+
+# ---------------------------------------------------------------------------
+# Sharded big-model scheme: index v by (leaf_tag, row, col).
+#
+# Leaves of scan-stacked expert weights can exceed 2**32 elements, so a
+# flat index does not fit uint32.  Instead each element is addressed by
+#   row = flat index over all leading dims   (< 2**32 for every real leaf)
+#   col = index in the trailing dim          (< 2**32 always)
+# and the leaf's ordinal in the pytree is folded into the seed.  Both
+# coordinates come from `broadcasted_iota`, so under pjit every shard
+# computes exactly its slice — zero collectives, any sharding.
+# ---------------------------------------------------------------------------
+
+
+def fold_seed(seed, leaf_tag: int) -> jax.Array:
+    """Fold a static leaf ordinal into the round seed."""
+    return splitmix32(_u32(seed) ^ splitmix32(_u32(leaf_tag)))
+
+
+def random_for_shape(
+    shape: tuple,
+    seed,
+    leaf_tag: int,
+    distribution: Distribution = Distribution.RADEMACHER,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Seeded random array addressed by (leaf_tag, row, col).
+
+    The client-side projection, the server-side reconstruction, the
+    Pallas kernels and the pure-jnp oracle all use this same addressing
+    scheme, so the regenerated v is bit-identical everywhere.
+    """
+    if len(shape) == 0:
+        shape2 = (1, 1)
+    elif len(shape) == 1:
+        shape2 = (1,) + tuple(shape)
+    else:
+        shape2 = tuple(shape)
+    ndim = len(shape2)
+    # row index = flat index over leading dims (row-major strides).
+    row = jnp.zeros(shape2, dtype=jnp.uint32)
+    stride = 1
+    for d in range(ndim - 2, -1, -1):
+        iota = jax.lax.broadcasted_iota(jnp.uint32, shape2, d)
+        row = row + iota * _u32(stride)
+        stride *= shape2[d]
+    if stride > 0xFFFFFFFF:
+        raise ValueError(f"leading-dim extent {stride} exceeds uint32 for shape {shape}")
+    col = jax.lax.broadcasted_iota(jnp.uint32, shape2, ndim - 1)
+    s = fold_seed(seed, leaf_tag)
+    if distribution == Distribution.RADEMACHER:
+        bits = hash_u32(s, row, col, tag=_TAG_U1)
+        sign_bit = (bits >> 8) & _u32(1)
+        out = jnp.where(sign_bit == 1, 1.0, -1.0).astype(dtype)
+    elif distribution == Distribution.GAUSSIAN:
+        u1 = uniform01(hash_u32(s, row, col, tag=_TAG_U1))
+        u2 = uniform01(hash_u32(s, row, col, tag=_TAG_U2))
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        out = (r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)).astype(dtype)
+    else:
+        raise ValueError(f"unknown distribution: {distribution}")
+    return out.reshape(shape)

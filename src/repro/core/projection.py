@@ -1,0 +1,216 @@
+"""Scalar projection encode/decode — the heart of FedScalar.
+
+Client side (Algorithm 1, lines 21–23)::
+
+    r = ⟨δ, v(ξ)⟩                      # encode: d floats → 1 float
+
+Server side (lines 9–12)::
+
+    δ̂ = r · v(ξ)                       # decode: unbiased estimate of δ
+
+``v`` is never transmitted, stored, or even materialized as a whole: it
+is regenerated leaf-by-leaf from the 32-bit seed ``ξ`` with the
+counter-based PRNG in :mod:`repro.core.prng`.  Under pjit every model
+shard generates exactly its slice of ``v``, so
+
+* ``project_tree``     costs one scalar ``psum`` over the model axis,
+* ``reconstruct_tree`` costs **zero** communication.
+
+Beyond-paper extensions implemented here:
+
+* ``num_projections m > 1`` — the paper's "future work": m independent
+  scalars per client cut the projection variance from O(d) to O(d/m)
+  at O(m) upload (§II, discussion after Thm 2.1).
+* ``block`` mode — a block-diagonal sketch: d is split into m
+  contiguous index blocks, block j is projected only onto its own
+  seeded vector.  Same O(m) upload; strictly smaller variance than m
+  full-d projections because cross-block noise terms vanish.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prng import (
+    Distribution,
+    fold_seed,
+    hash_u32,
+    random_for_shape,
+    splitmix32,
+)
+
+__all__ = [
+    "ProjectionMode",
+    "tree_size",
+    "project_tree",
+    "reconstruct_tree",
+    "project_reconstruct_mean",
+]
+
+
+class ProjectionMode(enum.Enum):
+    FULL = "full"      # each of the m projections spans all of d (paper + future-work m>1)
+    BLOCK = "block"    # block-diagonal sketch (beyond paper)
+
+
+def tree_size(tree: Any) -> int:
+    return sum(leaf.size for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def _leaves(tree: Any):
+    """Leaves in deterministic order with stable ordinal tags."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return list(enumerate(leaves))
+
+
+def _proj_seed(seed, j: int):
+    """Per-projection seed: fold the projection ordinal into the round seed."""
+    return splitmix32(jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(0xA511E9B3 + j))
+
+
+def _block_bounds(total: int, m: int, j: int) -> tuple[int, int]:
+    """Contiguous [lo, hi) bounds of block j of m over `total` elements."""
+    lo = (total * j) // m
+    hi = (total * (j + 1)) // m
+    return lo, hi
+
+
+def project_tree(
+    delta: Any,
+    seed,
+    distribution: Distribution = Distribution.RADEMACHER,
+    num_projections: int = 1,
+    mode: ProjectionMode = ProjectionMode.FULL,
+) -> jax.Array:
+    """Encode an update pytree into ``num_projections`` scalars.
+
+    Returns a float32 array of shape ``(num_projections,)``.  With the
+    paper's protocol (``num_projections=1``) the upload payload is this
+    one scalar plus the 32-bit seed.
+    """
+    leaves = _leaves(delta)
+    total = sum(l.size for _, l in leaves)
+    rs = []
+    for j in range(num_projections):
+        sj = _proj_seed(seed, j)
+        acc = jnp.float32(0.0)
+        offset = 0
+        if mode == ProjectionMode.BLOCK and num_projections > 1:
+            blo, bhi = _block_bounds(total, num_projections, j)
+        else:
+            blo, bhi = 0, total
+        for tag, leaf in leaves:
+            size = leaf.size
+            # Skip leaves wholly outside this projection's block.
+            if offset + size <= blo or offset >= bhi:
+                offset += size
+                continue
+            v = random_for_shape(leaf.shape, sj, tag, distribution)
+            x = leaf.astype(jnp.float32)
+            if blo > offset or bhi < offset + size:
+                # Partial overlap: mask by global flat position.  Leaves are
+                # large relative to m so this happens at most twice per block.
+                mask = _block_mask(leaf.shape, offset, blo, bhi)
+                acc = acc + jnp.sum(x * v * mask)
+            else:
+                acc = acc + jnp.sum(x * v)
+            offset += size
+        rs.append(acc)
+    return jnp.stack(rs)
+
+
+def _block_mask(shape: tuple, offset: int, blo: int, bhi: int) -> jax.Array:
+    """1.0 where the element's global flat index lies in [blo, bhi)."""
+    # Row/col decomposition mirrors random_for_shape so it partitions too.
+    if len(shape) == 0:
+        shape2 = (1, 1)
+    elif len(shape) == 1:
+        shape2 = (1,) + tuple(shape)
+    else:
+        shape2 = tuple(shape)
+    ndim = len(shape2)
+    lastdim = shape2[-1]
+    row = jnp.zeros(shape2, dtype=jnp.float32)
+    stride = 1
+    for d in range(ndim - 2, -1, -1):
+        iota = jax.lax.broadcasted_iota(jnp.float32, shape2, d)
+        row = row + iota * float(stride)
+        stride *= shape2[d]
+    col = jax.lax.broadcasted_iota(jnp.float32, shape2, ndim - 1)
+    # float32 is exact for indices < 2**24; block masks are only used in
+    # the small/medium-d regime (the sketch is per-leaf elsewhere).
+    flat = row * float(lastdim) + col + float(offset)
+    mask = jnp.logical_and(flat >= float(blo), flat < float(bhi))
+    return mask.astype(jnp.float32).reshape(shape)
+
+
+def reconstruct_tree(
+    like: Any,
+    seed,
+    r: jax.Array,
+    distribution: Distribution = Distribution.RADEMACHER,
+    num_projections: int = 1,
+    mode: ProjectionMode = ProjectionMode.FULL,
+    scale: float | jax.Array = 1.0,
+) -> Any:
+    """Decode scalars back to an update pytree: ``δ̂ = (scale/m) Σⱼ rⱼ vⱼ``.
+
+    ``like`` provides shapes/dtypes (e.g. the global params).  The 1/m
+    averaging keeps the estimator unbiased for any ``num_projections``.
+    With BLOCK mode each block is reconstructed only from its own
+    scalar (no 1/m factor — blocks partition the index space).
+    """
+    leaves = _leaves(like)
+    total = sum(l.size for _, l in leaves)
+    r = jnp.asarray(r, jnp.float32).reshape(-1)
+    m = num_projections
+    out = []
+    offset = 0
+    for tag, leaf in leaves:
+        size = leaf.size
+        acc = jnp.zeros(leaf.shape, jnp.float32)
+        for j in range(m):
+            sj = _proj_seed(seed, j)
+            if mode == ProjectionMode.BLOCK and m > 1:
+                blo, bhi = _block_bounds(total, m, j)
+                if offset + size <= blo or offset >= bhi:
+                    continue
+                v = random_for_shape(leaf.shape, sj, tag, distribution)
+                if blo > offset or bhi < offset + size:
+                    mask = _block_mask(leaf.shape, offset, blo, bhi)
+                    acc = acc + r[j] * v * mask
+                else:
+                    acc = acc + r[j] * v
+            else:
+                v = random_for_shape(leaf.shape, sj, tag, distribution)
+                acc = acc + (r[j] / m) * v
+        out.append((acc * scale).astype(leaf.dtype))
+        offset += size
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def project_reconstruct_mean(
+    deltas: Sequence[Any],
+    seeds: Sequence,
+    distribution: Distribution = Distribution.RADEMACHER,
+    num_projections: int = 1,
+    mode: ProjectionMode = ProjectionMode.FULL,
+) -> Any:
+    """Reference end-to-end: encode every client, decode, average.
+
+    Mirrors Algorithm 1 lines 4–12 for explicit client lists (the
+    small-scale simulation path).  The mesh-parallel path fuses this
+    into the pjit'd round step in :mod:`repro.launch.train`.
+    """
+    n = len(deltas)
+    assert n == len(seeds)
+    acc = None
+    for delta, seed in zip(deltas, seeds):
+        r = project_tree(delta, seed, distribution, num_projections, mode)
+        rec = reconstruct_tree(delta, seed, r, distribution, num_projections, mode)
+        acc = rec if acc is None else jax.tree_util.tree_map(jnp.add, acc, rec)
+    return jax.tree_util.tree_map(lambda x: x / n, acc)

@@ -1,0 +1,8 @@
+"""Data pipelines: synthetic digits, client partitioning, LM token streams."""
+from repro.data.digits import load_digits, train_test_split_arrays
+from repro.data.partition import make_client_datasets, partition_dirichlet, partition_iid
+
+__all__ = [
+    "load_digits", "train_test_split_arrays",
+    "make_client_datasets", "partition_dirichlet", "partition_iid",
+]

@@ -1,0 +1,8 @@
+"""Federated runtime: simulation driver + bandwidth/energy cost model."""
+from repro.fed.costmodel import ChannelConfig, CostModel, table1_upload_times
+from repro.fed.simulation import SimulationConfig, run_simulation, METHODS
+
+__all__ = [
+    "ChannelConfig", "CostModel", "table1_upload_times",
+    "SimulationConfig", "run_simulation", "METHODS",
+]

@@ -1,0 +1,100 @@
+"""System-level cost model: wall-clock (eq. 12), energy (eq. 13), Table I.
+
+    T_wall^(k)  = T_other^(k) + B_upload^(k) / R^(k)          (12)
+    E_round     = P_tx · B_upload / R                          (13)
+
+with R the uplink bandwidth in bits/s, B_upload the uplink payload in
+bits, P_tx the transmit power.  Following the paper's §III setup:
+
+* nominal uplink R = 0.1 Mbps (bandwidth-constrained edge regime),
+* multiplicative lognormal channel variability on R,
+* T_other modeled as a fraction of the *FedAvg* upload time (identical
+  for every method — it covers local compute and system overhead),
+* P_tx = 2 W,
+* 32 bits per transmitted float.
+
+Two medium-access schemes (Table I):
+
+* ``concurrent`` — all N clients upload in parallel (per-round upload
+  time = max over clients = B/R for homogeneous clients),
+* ``tdma``       — clients transmit sequentially in dedicated slots
+  (per-round upload time = N · B/R).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ChannelConfig", "CostModel", "table1_upload_times"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    bandwidth_bps: float = 0.1e6       # nominal uplink R
+    lognormal_sigma: float = 0.25      # channel fluctuation (multiplicative)
+    p_tx_watts: float = 2.0            # transmit power
+    t_other_frac: float = 0.05         # T_other as fraction of FedAvg upload time
+    access: str = "concurrent"         # or "tdma"
+    num_clients: int = 20
+    float_bits: int = 32
+
+
+class CostModel:
+    """Accumulates bits / seconds / joules across rounds for one method."""
+
+    def __init__(self, channel: ChannelConfig, fedavg_bits_per_client: int, rng_seed: int = 0):
+        self.ch = channel
+        self._rng = np.random.RandomState(rng_seed)
+        # T_other is pegged to FedAvg's nominal upload time — the same
+        # additive constant for every method (paper §III).
+        fedavg_upload_s = fedavg_bits_per_client / channel.bandwidth_bps
+        self.t_other = channel.t_other_frac * fedavg_upload_s
+
+    def round_cost(self, bits_per_client: int) -> tuple[float, float, float]:
+        """→ (uploaded_bits_total, wall_seconds, energy_joules) for one round."""
+        ch = self.ch
+        # lognormal channel draw, mean-one multiplicative fluctuation
+        fluct = self._rng.lognormal(mean=-0.5 * ch.lognormal_sigma**2, sigma=ch.lognormal_sigma)
+        rate = ch.bandwidth_bps * fluct
+        per_client_s = bits_per_client / rate
+        if ch.access == "tdma":
+            upload_s = ch.num_clients * per_client_s
+        else:
+            upload_s = per_client_s
+        total_bits = ch.num_clients * bits_per_client
+        wall = self.t_other + upload_s
+        # energy: every client transmits for per_client_s at P_tx
+        energy = ch.num_clients * ch.p_tx_watts * per_client_s
+        return float(total_bits), float(wall), float(energy)
+
+
+def table1_upload_times(
+    d: int = 1000,
+    rounds: int = 500,
+    num_clients: int = 20,
+    float_bits: int = 32,
+    bandwidths_bps: tuple = (1e3, 10e3, 50e3, 100e3),
+    budget_s: float = 1200.0,
+):
+    """Reproduce Table I: total upload time, concurrent vs TDMA.
+
+    Returns a list of dict rows; ``†`` marks battery-budget violations.
+    """
+    rows = []
+    payload = d * float_bits  # bits per client per round
+    for bw in bandwidths_bps:
+        per_round = payload / bw
+        concurrent = rounds * per_round
+        tdma = rounds * num_clients * per_round
+        rows.append(
+            dict(
+                bandwidth_bps=bw,
+                upload_time_per_round_s=per_round,
+                concurrent_total_s=concurrent,
+                concurrent_violates=concurrent > budget_s,
+                tdma_total_s=tdma,
+                tdma_violates=tdma > budget_s,
+            )
+        )
+    return rows

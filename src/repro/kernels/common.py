@@ -1,0 +1,63 @@
+"""Shared in-kernel PRNG: SplitMix32 chain, bit-identical to repro.core.prng.
+
+The kernels regenerate the projection vector v per VMEM tile from
+``(seed, row, col)`` — v never exists in HBM.  These helpers are plain
+uint32 jnp ops, so the same code runs inside a Pallas kernel body, in
+interpret mode, and in the pure-jnp oracle (ref.py); bit-equality across
+the three is what the kernel tests assert.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_TAG_U1 = 0x9E3779B9
+_TAG_U2 = 0x85EBCA6B
+
+
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def splitmix32(x):
+    x = _u32(x)
+    x = x + _u32(0x9E3779B9)
+    x = x ^ (x >> 16)
+    x = x * _u32(0x21F0AAAD)
+    x = x ^ (x >> 15)
+    x = x * _u32(0x735A2D97)
+    x = x ^ (x >> 15)
+    return x
+
+
+def hash_u32(seed, hi, lo, tag):
+    h = splitmix32(_u32(seed) ^ _u32(tag))
+    h = splitmix32(h ^ _u32(hi))
+    h = splitmix32(h ^ _u32(lo))
+    return h
+
+
+def fold_seed(seed, leaf_tag):
+    return splitmix32(_u32(seed) ^ splitmix32(_u32(leaf_tag)))
+
+
+def uniform01(bits):
+    return (bits.astype(jnp.float32) + 1.0) * jnp.float32(2.0**-32)
+
+
+def gen_tile(seed_folded, row, col, distribution: str):
+    """v values for a tile of global (row, col) uint32 coordinate arrays.
+
+    Matches ``repro.core.prng.random_for_shape`` exactly: the caller
+    folds the leaf tag into the seed first (``fold_seed``).
+    """
+    if distribution == "rademacher":
+        bits = hash_u32(seed_folded, row, col, _TAG_U1)
+        sign = (bits >> 8) & _u32(1)
+        return jnp.where(sign == 1, 1.0, -1.0).astype(jnp.float32)
+    if distribution == "gaussian":
+        u1 = uniform01(hash_u32(seed_folded, row, col, _TAG_U1))
+        u2 = uniform01(hash_u32(seed_folded, row, col, _TAG_U2))
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        return r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)
+    raise ValueError(distribution)

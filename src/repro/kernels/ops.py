@@ -1,0 +1,118 @@
+"""jit'd wrappers: arbitrary pytrees → block-aligned 2-D kernel calls.
+
+These mirror the pure-jnp protocol functions bit-for-bit (same hash,
+same (row, col) addressing, same per-projection seed folding), so the
+kernel path can replace the jnp path anywhere:
+
+* ``project_tree_kernel``    ≡ repro.core.projection.project_tree (m=1)
+* ``server_update_kernel``   ≡ repro.core.fedscalar.server_aggregate
+* ``qsgd_roundtrip_kernel``  — kernelized QSGD quantize→dequantize
+
+Leaves are viewed as (leading-dims, last-dim) matrices and zero-padded
+to block multiples; zero padding contributes nothing to the projection
+and padded outputs are sliced away, so results are exact, not
+approximate.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prng import Distribution
+from repro.core.projection import _proj_seed
+from repro.kernels.qsgd_quant import qsgd_kernel_call
+from repro.kernels.seeded_projection import projection_kernel_call
+from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
+
+__all__ = [
+    "as_blocked_2d",
+    "project_tree_kernel",
+    "server_update_kernel",
+    "qsgd_roundtrip_kernel",
+]
+
+
+def _pick_block(rows: int, cols: int) -> tuple:
+    br = min(256, -(-rows // 8) * 8)
+    bc = min(512, -(-cols // 128) * 128)
+    return br, bc
+
+
+def as_blocked_2d(leaf: jax.Array):
+    """leaf → (padded 2-D view, block, original (rows, cols))."""
+    if leaf.ndim == 0:
+        x = leaf.reshape(1, 1)
+    elif leaf.ndim == 1:
+        x = leaf.reshape(1, -1)
+    else:
+        x = leaf.reshape(-1, leaf.shape[-1])
+    rows, cols = x.shape
+    br, bc = _pick_block(rows, cols)
+    pr = (-rows) % br
+    pc = (-cols) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x, (br, bc), (rows, cols)
+
+
+def _dist_name(distribution: Distribution) -> str:
+    return distribution.value
+
+
+def project_tree_kernel(
+    delta: Any,
+    seed,
+    distribution: Distribution = Distribution.RADEMACHER,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Kernelized FedScalar encode (single projection): → (1,) float32."""
+    sj = _proj_seed(seed, 0)
+    acc = jnp.float32(0.0)
+    for tag, leaf in enumerate(jax.tree_util.tree_leaves(delta)):
+        x2d, block, _ = as_blocked_2d(leaf)
+        acc = acc + projection_kernel_call(
+            x2d, sj, tag, _dist_name(distribution), block, interpret=interpret)
+    return acc.reshape(1)
+
+
+def server_update_kernel(
+    params: Any,
+    rs: jax.Array,        # (N, 1) or (N,) uploaded scalars
+    seeds: jax.Array,     # (N,) round seeds
+    server_lr: float = 1.0,
+    distribution: Distribution = Distribution.RADEMACHER,
+    interpret: bool | None = None,
+) -> Any:
+    """Kernelized Algorithm 1 lines 7–13: x ← x + (lr/N)·Σₙ rₙ vₙ."""
+    rs = rs.reshape(-1).astype(jnp.float32)
+    n = rs.shape[0]
+    sj = jax.vmap(lambda s: _proj_seed(s, 0))(seeds)
+    scale = server_lr / n
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for tag, leaf in enumerate(leaves):
+        x2d, block, (rows, cols) = as_blocked_2d(leaf)
+        y = reconstruct_kernel_call(
+            x2d, sj, rs, tag, scale, _dist_name(distribution), block,
+            interpret=interpret)
+        out.append(y[:rows, :cols].reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def qsgd_roundtrip_kernel(
+    tree: Any,
+    seed,
+    bits: int = 8,
+    interpret: bool | None = None,
+) -> Any:
+    """Kernelized per-leaf QSGD quantize→dequantize."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for tag, leaf in enumerate(leaves):
+        x2d, block, (rows, cols) = as_blocked_2d(leaf)
+        q = qsgd_kernel_call(x2d, seed, tag, bits, block, interpret=interpret)
+        out.append(q[:rows, :cols].reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused seeded reconstruction  y = x + s·Σₙ rₙ·vₙ(ξₙ).
+
+The server-side hot loop (Algorithm 1 lines 8–13) for all N cohort
+members at once, fused with the global-model update.  A naive server
+materializes each vₙ (N·d floats of HBM traffic plus N·d of writes);
+this kernel streams the params once and regenerates every vₙ tile
+in-register:
+
+    HBM traffic:  read x (d) + write y (d)           — independent of N
+    compute:      N hash-chains + FMA per element    — VPU-bound
+
+which is the paper's "upload two scalars" insight transplanted to the
+memory system: reconstruction cost no longer scales with N in bytes,
+only in (cheap, hidable) integer ops.
+
+Grid: 2-D over tiles of the parameter matrix; seeds/r live in SMEM; the
+client loop is a static unroll (cohorts are small: 4–32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import fold_seed, gen_tile
+
+__all__ = ["reconstruct_kernel_call"]
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _rec_kernel(seeds_ref, rs_ref, scale_ref, x_ref, o_ref, *,
+                distribution: str, num_clients: int, block: tuple,
+                row_offset: int, col_offset: int):
+    pi = pl.program_id(0)
+    pj = pl.program_id(1)
+    br, bc = block
+    row = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 0)
+           + jnp.uint32(row_offset) + pi.astype(jnp.uint32) * jnp.uint32(br))
+    col = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 1)
+           + jnp.uint32(col_offset) + pj.astype(jnp.uint32) * jnp.uint32(bc))
+
+    acc = jnp.zeros((br, bc), jnp.float32)
+    for n in range(num_clients):          # static unroll over the cohort
+        v = gen_tile(seeds_ref[n], row, col, distribution)
+        acc = acc + rs_ref[n] * v
+    y = x_ref[...].astype(jnp.float32) + scale_ref[0] * acc
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def reconstruct_kernel_call(
+    x2d: jax.Array,
+    seeds: jax.Array,          # (N,) uint32 round seeds (unfolded)
+    rs: jax.Array,             # (N,) float32 uploaded scalars
+    leaf_tag: int,
+    scale,                     # server_lr / N
+    distribution: str = "rademacher",
+    block: tuple = DEFAULT_BLOCK,
+    row_offset: int = 0,
+    col_offset: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """→ updated params tile  x + scale·Σₙ rₙ vₙ  (same shape/dtype as x2d)."""
+    rows, cols = x2d.shape
+    br, bc = block
+    assert rows % br == 0 and cols % bc == 0, (x2d.shape, block)
+    n = seeds.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if interpret:
+        interpret = pltpu.InterpretParams()
+    seeds_folded = jax.vmap(lambda s: fold_seed(s, leaf_tag))(seeds)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+
+    kern = functools.partial(
+        _rec_kernel, distribution=distribution, num_clients=n, block=block,
+        row_offset=row_offset, col_offset=col_offset)
+    return pl.pallas_call(
+        kern,
+        grid=(rows // br, cols // bc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x2d.dtype),
+        interpret=interpret,
+    )(seeds_folded, rs.astype(jnp.float32), scale_arr, x2d)

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (including
+# `from repro...`) — jax locks the device count on first initialization.
+
+DOC = """Multi-pod dry-run: AOT-lower + compile every (arch × shape × mesh).
+
+For each combination this driver:
+
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. assembles ShapeDtypeStruct inputs from ``Arch.input_specs`` and the
+     sharding rules (no device allocation anywhere),
+  3. ``jax.jit(step).lower(...).compile()`` — sharding mismatches, OOM
+     at compile, or unsupported collectives fail here,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` (per-device on
+     the forced-host platform) plus collective-op statistics parsed from
+     the optimized HLO, into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every combo
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.launch.train import FLRunConfig, make_train_step
+from repro.models.api import INPUT_SHAPES
+from repro.sharding.rules import input_specs_sharding, named, param_specs
+
+OUTDIR = "experiments/dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind from optimized HLO.
+
+    Result size is the canonical proxy for bytes moved per device:
+    all-gather results are the gathered buffer, all-reduce results the
+    reduced buffer (ring cost ≈ 2× that — applied in the roofline), and
+    ``-start``/``-done`` async pairs are counted once (the ``-done`` op
+    repeats the buffer, so we halve pairs).
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    seen_start = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+    total = sum(v["bytes"] for v in stats.values())
+    return {"per_kind": stats, "total_bytes": total}
+
+
+def build_step_and_inputs(arch_name: str, shape_name: str, mesh,
+                          variant: str = "baseline"):
+    """→ (step_fn, input pytree of ShapeDtypeStruct, in_shardings, out_shardings).
+
+    Hillclimb variants (§Perf):
+      * ``dp256``           (train): batch data-parallel over BOTH mesh axes —
+        removes the model-axis compute replication of the zero3 baseline.
+      * ``client_parallel`` (train): FL clients mapped onto the data axis —
+        removes the per-local-step gradient all-reduce entirely.
+      * ``tp``              (prefill/decode): resident tensor-parallel weights —
+        removes per-layer weight all-gathers.
+    """
+    from repro.launch.train import make_train_step_client_parallel
+
+    arch = get_arch(arch_name)
+    if variant == "cf1":
+        # §Perf MoE iteration: capacity factor 1.25 → 1.0 (exact-capacity
+        # dispatch; ~0.3 % quality cost per the MoE literature)
+        import dataclasses as _dc
+
+        from repro.models.api import Arch as _Arch
+
+        arch = _Arch(_dc.replace(arch.cfg, capacity_factor=1.0))
+    cfg = arch.cfg
+    seq, gbatch, mode = INPUT_SHAPES[shape_name]
+    specs = arch.input_specs(shape_name)
+    pshapes = arch.param_shapes()
+    layout = "tp" if variant == "tp" else "zero3"
+    pspec = param_specs(pshapes, mesh, num_experts=cfg.num_experts, layout=layout)
+    pshard = named(mesh, pspec)
+
+    if mode == "train":
+        fl = FLRunConfig(num_virtual_clients=4, local_steps=2)
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if variant == "dp256":
+            dp = dp + ("model",)
+            step = make_train_step(arch, fl, dp_axes=dp)
+        elif variant == "client_parallel":
+            axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            n_clients = axes["data"] * axes.get("pod", 1)
+            fl = FLRunConfig(num_virtual_clients=n_clients, local_steps=2)
+            pspec_tp = param_specs(pshapes, mesh, num_experts=cfg.num_experts,
+                                   layout="tp")
+            cp_dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            step = make_train_step_client_parallel(arch, fl, pspec_tp,
+                                                   dp_axes=cp_dp)
+        else:
+            step = make_train_step(arch, fl, dp_axes=dp)
+        batch = specs["batch"]
+        bshard = named(mesh, input_specs_sharding(batch, mesh, gbatch))
+        args = (pshapes, batch, specs["round_idx"])
+        in_sh = (pshard, bshard, None)
+        out_sh = (pshard, None)
+        return step, args, in_sh, out_sh, {}
+
+    if mode == "prefill":
+        step = make_prefill_step(arch, capacity=seq)
+        batch = specs["batch"]
+        bshard = named(mesh, input_specs_sharding(batch, mesh, gbatch))
+        caches_shape = jax.eval_shape(
+            lambda p, b: step(p, b)[1], pshapes, batch)
+        cshard = named(mesh, input_specs_sharding(caches_shape, mesh, gbatch))
+        args = (pshapes, batch)
+        in_sh = (pshard, bshard)
+        out_sh = (None, cshard)
+        return step, args, in_sh, out_sh, {}
+
+    # decode — cache buffers are donated (in-place ring update); without
+    # donation the output cache double-counts against HBM (§Perf iter 3)
+    window = arch.serve_window(shape_name)
+    step = make_decode_step(arch, window=window)
+    caches = specs["caches"]
+    cshard = named(mesh, input_specs_sharding(caches, mesh, gbatch))
+    tshard = named(mesh, input_specs_sharding(specs["token"], mesh, gbatch))
+    args = (pshapes, specs["token"], caches, specs["position"])
+    in_sh = (pshard, tshard, cshard, None)
+    out_sh = (None, cshard)
+    return step, args, in_sh, out_sh, {"donate_argnums": (2,)}
+
+
+def run_one(arch_name: str, shape_name: str, multi_pod: bool,
+            save: bool = True, verbose: bool = True,
+            variant: str = "baseline") -> dict:
+    from repro.sharding.activations import batch_mode
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch_name}__{shape_name}__{mesh_name}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step, args, in_sh, out_sh, jit_kw = build_step_and_inputs(
+        arch_name, shape_name, mesh, variant)
+
+    bm = "dp256" if variant == "dp256" else "dp"
+    with jax.set_mesh(mesh), batch_mode(bm):
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          **jit_kw).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+
+    coll = collective_stats(hlo)
+    n_dev = int(np.prod(mesh.devices.shape))
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "variant": variant,
+        "num_devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # memory_analysis / cost_analysis are PER-DEVICE on this backend
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "collective_bytes": coll["total_bytes"],
+        },
+        "collectives": coll["per_kind"],
+        "hlo_bytes": len(hlo),
+    }
+    if save:
+        os.makedirs(OUTDIR, exist_ok=True)
+        with open(os.path.join(OUTDIR, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    if verbose:
+        pd = result["per_device"]
+        print(f"[ok] {tag}: compile={t_compile:.1f}s "
+              f"peak/dev={pd['peak_bytes_est']/2**30:.2f}GiB "
+              f"flops/dev={pd['flops']:.3g} coll/dev={pd['collective_bytes']/2**20:.1f}MiB",
+              flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "dp256", "client_parallel", "tp", "cf1"])
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all or --arch/--shape")
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+            suffix = "" if args.variant == "baseline" else f"__{args.variant}"
+            path = os.path.join(OUTDIR, f"{a}__{s}__{mesh_name}{suffix}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[skip] {a}__{s}__{mesh_name}", flush=True)
+                        continue
+            try:
+                run_one(a, s, args.multi_pod, variant=args.variant)
+            except Exception as e:  # record the failure; keep sweeping
+                failures.append((a, s))
+                os.makedirs(OUTDIR, exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump({"arch": a, "shape": s, "mesh": mesh_name,
+                               "ok": False, "error": str(e)[:2000]}, f, indent=1)
+                print(f"[FAIL] {a}__{s}__{mesh_name}: {str(e)[:300]}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures: {failures}")
+        raise SystemExit(1)
+    print("\nall combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

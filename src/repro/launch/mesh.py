@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e pods).
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — the pod axis
+carries FL cohort replication / cross-pod data parallelism.
+
+Defined as a function (never a module-level constant) so importing this
+module does not touch jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_axes_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

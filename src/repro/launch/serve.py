@@ -1,0 +1,36 @@
+"""Serving steps: batched prefill + single-token decode on the pod mesh.
+
+FedScalar is a training protocol; serving exercises the trained global
+model.  ``make_prefill_step`` lowers the full-prompt pass that builds
+the KV/SSM caches; ``make_decode_step`` is the one-token step the
+decode_32k / long_500k shapes lower (greedy next-token included so the
+lowered program is a complete serving iteration).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(arch, capacity: int, window: Optional[int] = None):
+    def prefill_step(params, batch):
+        logits, caches = arch.prefill(params, batch, capacity=capacity,
+                                      window=window)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, caches
+
+    return prefill_step
+
+
+def make_decode_step(arch, window: Optional[int] = None):
+    def decode_step(params, token, caches, position):
+        logits, caches = arch.decode(params, token, caches, position,
+                                     window=window)
+        next_token = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+        return next_token, caches
+
+    return decode_step

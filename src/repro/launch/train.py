@@ -1,0 +1,210 @@
+"""Production FedScalar training step — the technique on the pod mesh.
+
+One ``train_step`` = one FedScalar round (Algorithm 1) over
+``num_virtual_clients`` sequential cohort members:
+
+  * the global batch is split into per-client slices (each slice is
+    itself data-parallel over the mesh's data axis),
+  * each client runs S local SGD steps from the shared global params
+    (``lax.scan`` over local steps — grads via full-remat scanned layers),
+  * the d-dimensional update δₙ is **never communicated**: the client
+    computes rₙ = ⟨δₙ, v(ξₙ)⟩ — a per-shard partial dot plus one scalar
+    all-reduce,
+  * the server step regenerates v(ξₙ) shard-locally from the seed and
+    applies  x ← x + (1/N) Σₙ rₙ·v(ξₙ)  with **zero** d-sized
+    collectives (DESIGN.md §2).
+
+Sequential (fori_loop) client placement keeps peak memory at one param
+copy + one delta regardless of cohort size — this is what lets the 235B
+MoE config lower on 256 chips.  (The vmapped placement used by the
+small-scale simulation lives in ``repro.core.fedscalar``.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedscalar import FedScalarConfig, round_seeds, server_aggregate
+from repro.core.prng import Distribution
+from repro.core.projection import project_tree
+
+__all__ = ["FLRunConfig", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FLRunConfig:
+    """FL execution config for the mesh-parallel production round."""
+
+    num_virtual_clients: int = 4      # cohort members simulated per round
+    local_steps: int = 2              # S
+    local_lr: float = 3e-3            # α
+    server_lr: float = 1.0
+    distribution: Distribution = Distribution.RADEMACHER
+    num_projections: int = 1
+
+    def protocol(self) -> FedScalarConfig:
+        return FedScalarConfig(
+            local_steps=self.local_steps,
+            local_lr=self.local_lr,
+            server_lr=self.server_lr,
+            distribution=self.distribution,
+            num_projections=self.num_projections,
+        )
+
+
+def make_train_step(arch, fl: FLRunConfig, window: Optional[int] = None,
+                    dp_axes: tuple = ("data",)):
+    """→ train_step(params, batch, round_idx) -> (new_params, metrics).
+
+    ``dp_axes`` are the mesh axes carrying the batch dimension (e.g.
+    ``('pod', 'data')`` on the multi-pod mesh).  The client and
+    local-step axes are split off the *leading* batch dim by reshape —
+    never by dynamic_slice along a sharded dim, which would force an
+    all-gather of the batch and unshard everything downstream.  Batch
+    shardings are re-pinned after each reshape.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    pcfg = fl.protocol()
+
+    def loss_fn(params, batch):
+        return arch.loss(params, batch, window=window)
+
+    def train_step(params: Any, batch: Any, round_idx):
+        n = fl.num_virtual_clients
+        s = fl.local_steps
+        gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        assert gb % n == 0, (gb, n)
+        bc = gb // n
+        assert bc % s == 0, (bc, s)
+        per_step = bc // s
+        seeds = round_seeds(round_idx, n)
+
+        def to_client_steps(x):  # noqa: ANN001
+            # (GB, ...) → (n_clients, S, per_step, ...); keep batch sharding
+            # on the per-step dim (dims 0/1 iterate under scan).
+            y = x.reshape((n, s, per_step) + x.shape[1:])
+            if jax.sharding.get_abstract_mesh().empty:
+                return y       # single-device (CPU tests/examples)
+            spec = P(None, None, dp_axes, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(y, spec)
+
+        sb = jax.tree_util.tree_map(to_client_steps, batch)
+
+        def client_round(_, xs):
+            client_batches, seed = xs       # leaves (S, per_step, ...)
+
+            def local_step(carry, b):
+                p, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(p, b)
+                p = jax.tree_util.tree_map(
+                    lambda w, gg: w - fl.local_lr * gg.astype(w.dtype), p, g)
+                return (p, lsum + l), None
+
+            (pf, lsum), _ = jax.lax.scan(
+                local_step, (params, jnp.float32(0.0)), client_batches)
+            delta = jax.tree_util.tree_map(lambda a, b_: a - b_, pf, params)
+            r = project_tree(delta, seed, pcfg.distribution,
+                             pcfg.num_projections, pcfg.mode)
+            return None, (r, lsum / s)
+
+        _, (rs, losses) = jax.lax.scan(client_round, None, (sb, seeds))
+
+        new_params = server_aggregate(params, rs, seeds, pcfg)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "r_rms": jnp.sqrt(jnp.mean(rs.astype(jnp.float32) ** 2)),
+            "uploaded_scalars": jnp.int32(n * (pcfg.num_projections + 1)),
+        }
+        return new_params, metrics
+
+    return train_step
+
+
+def make_train_step_client_parallel(arch, fl: FLRunConfig, param_spec_tp,
+                                    dp_axes: tuple = ("data",),
+                                    window: Optional[int] = None):
+    """Hillclimb placement: clients live ON the mesh's data axis.
+
+    Each data-axis group holds one cohort member's (broadcast) model
+    replica, model-sharded over the model axis (``param_spec_tp``).  The
+    inner local-SGD loop then needs **no gradient all-reduce at all** —
+    each client's gradient is local to its group — and the only
+    cross-client communication left in the whole round is the
+    N-scalar ``r`` psum plus the (communication-free) seeded
+    reconstruction.  This is the FedScalar uplink property transplanted
+    into the pod: the collective term drops from
+    O(params × clients × steps) to O(weight-fetch).
+
+    Trade-off vs the sequential placement: cohort size is pinned to the
+    data-axis extent and peak params memory is params/model_shards per
+    device (no FSDP over data).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.activations import batch_mode
+
+    pcfg = fl.protocol()
+
+    def loss_fn(params, batch):
+        return arch.loss(params, batch, window=window)
+
+    def train_step(params: Any, batch: Any, round_idx):
+        n = fl.num_virtual_clients
+        s = fl.local_steps
+        gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        assert gb % n == 0 and (gb // n) % s == 0, (gb, n, s)
+        per_step = gb // n // s
+        seeds = round_seeds(round_idx, n)
+
+        meshless = jax.sharding.get_abstract_mesh().empty
+
+        def to_clients(x):
+            y = x.reshape((n, s, per_step) + x.shape[1:])
+            if meshless:
+                return y
+            return jax.lax.with_sharding_constraint(
+                y, P(dp_axes, *([None] * (x.ndim + 1))))
+
+        sb = jax.tree_util.tree_map(to_clients, batch)
+
+        def rep(w, spec):
+            y = jnp.broadcast_to(w[None], (n,) + w.shape)
+            if meshless:
+                return y
+            return jax.lax.with_sharding_constraint(y, P(dp_axes, *tuple(spec)))
+
+        p_rep = jax.tree_util.tree_map(rep, params, param_spec_tp)
+
+        def one_client(p0, client_batches, seed):
+            def local_step(carry, b):
+                p, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(p, b)
+                p = jax.tree_util.tree_map(
+                    lambda w, gg: w - fl.local_lr * gg.astype(w.dtype), p, g)
+                return (p, lsum + l), None
+
+            (pf, lsum), _ = jax.lax.scan(local_step, (p0, jnp.float32(0.0)),
+                                         client_batches)
+            delta = jax.tree_util.tree_map(lambda a, b_: a - b_, pf, p0)
+            r = project_tree(delta, seed, pcfg.distribution,
+                             pcfg.num_projections, pcfg.mode)
+            return r, lsum / s
+
+        # inner BATCH constraints off: the data axis carries the client dim
+        with batch_mode("off"):
+            rs, losses = jax.vmap(one_client)(p_rep, sb, seeds)
+
+        new_params = server_aggregate(params, rs, seeds, pcfg)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "r_rms": jnp.sqrt(jnp.mean(rs.astype(jnp.float32) ** 2)),
+            "uploaded_scalars": jnp.int32(n * (pcfg.num_projections + 1)),
+        }
+        return new_params, metrics
+
+    return train_step

@@ -1,0 +1,1 @@
+"""Model zoo: paper MLP + the assigned transformer/SSM/MoE architectures."""

@@ -1,0 +1,149 @@
+"""Unified architecture API: one object per assigned arch.
+
+``Arch`` wraps a ModelConfig with uniform entry points used by the
+launcher, dry-run and tests:
+
+* ``init(key)``                        → params
+* ``loss(params, batch)``              → scalar CE   (train shapes)
+* ``prefill(params, batch)``           → (logits, caches)
+* ``decode(params, token, caches, pos)``→ (logits, caches)
+* ``input_specs(shape_name)``          → ShapeDtypeStruct pytrees for
+  every entry point, per the assignment's four input shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+__all__ = ["Arch", "INPUT_SHAPES", "LONG_WINDOW"]
+
+# The four assigned input shapes: name → (seq_len, global_batch, mode)
+INPUT_SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# Sliding window used by full-attention archs at 500k decode (DESIGN.md §4).
+LONG_WINDOW = 8192
+
+
+class Arch:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.encoder_layers > 0
+
+    # ---------------- parameters ----------------
+    def init(self, key):
+        if self.is_encdec:
+            return ed.init_encdec(self.cfg, key)
+        return lm.init_lm(self.cfg, key)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---------------- training ----------------
+    def loss(self, params, batch, window: Optional[int] = None):
+        if self.is_encdec:
+            return ed.encdec_loss(params, self.cfg, batch, window=window)
+        return lm.lm_loss(params, self.cfg, batch, window=window)
+
+    # ---------------- serving ----------------
+    def prefill(self, params, batch, capacity: int, window: Optional[int] = None):
+        if self.is_encdec:
+            return ed.encdec_prefill(params, self.cfg, batch["embeds"],
+                                     batch["tokens"], capacity=capacity,
+                                     window=window)
+        return lm.lm_prefill(params, self.cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"), capacity=capacity,
+                             window=window)
+
+    def decode(self, params, token, caches, position, window: Optional[int] = None):
+        if self.is_encdec:
+            return ed.encdec_decode(params, self.cfg, token, caches, position,
+                                    window=window)
+        return lm.lm_decode(params, self.cfg, token, caches, position,
+                            window=window)
+
+    def init_caches(self, batch: int, capacity: int):
+        if self.is_encdec:
+            enc = jnp.zeros((batch, self.cfg.encoder_seq, self.cfg.d_model),
+                            self.cfg.jnp_dtype)
+            return ed.init_decoder_caches(self.cfg, batch, capacity, enc)
+        return lm.init_lm_caches(self.cfg, batch, capacity)
+
+    # ---------------- shape plumbing ----------------
+    def decode_window(self, seq_len: int) -> int:
+        """Cache capacity for a decode shape — full attention archs cap the
+        ring at LONG_WINDOW beyond 32k (sliding-window carve-out)."""
+        if seq_len > 32768:
+            return LONG_WINDOW
+        return seq_len
+
+    def supports(self, shape_name: str) -> bool:
+        return shape_name in INPUT_SHAPES
+
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+        Returns a dict with keys depending on mode:
+          train:   {"batch": {tokens, labels[, embeds]}, "round_idx"}
+          prefill: {"batch": {tokens[, embeds]}}
+          decode:  {"token", "caches", "position"}
+        """
+        cfg = self.cfg
+        seq, gbatch, mode = INPUT_SHAPES[shape_name]
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+
+        def frontend_embeds(b):
+            if cfg.frontend == "vision":
+                return sd((b, cfg.num_frontend_tokens, cfg.d_model), cfg.jnp_dtype)
+            if cfg.frontend == "audio":
+                return sd((b, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype)
+            return None
+
+        if mode == "train":
+            text = seq
+            if cfg.frontend == "vision":
+                text = seq - cfg.num_frontend_tokens
+            batch = {"tokens": sd((gbatch, text), i32),
+                     "labels": sd((gbatch, text), i32)}
+            fe = frontend_embeds(gbatch)
+            if fe is not None:
+                batch["embeds"] = fe
+            return {"batch": batch, "round_idx": sd((), i32)}
+
+        if mode == "prefill":
+            text = seq
+            if cfg.frontend == "vision":
+                text = seq - cfg.num_frontend_tokens
+            batch = {"tokens": sd((gbatch, text), i32)}
+            fe = frontend_embeds(gbatch)
+            if fe is not None:
+                batch["embeds"] = fe
+            return {"batch": batch}
+
+        # decode: one new token against a filled cache
+        capacity = self.decode_window(seq)
+        caches = jax.eval_shape(lambda: self.init_caches(gbatch, capacity))
+        return {
+            "token": sd((gbatch, 1), i32),
+            "caches": caches,
+            "position": sd((), i32),
+        }
+
+    def serve_window(self, shape_name: str) -> Optional[int]:
+        """Window override passed to decode for this shape."""
+        seq, _, mode = INPUT_SHAPES[shape_name]
+        if mode == "decode" and seq > 32768 and self.cfg.num_heads:
+            return LONG_WINDOW
+        return None

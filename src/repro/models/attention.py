@@ -1,0 +1,262 @@
+"""Grouped-query attention with RoPE, sliding windows, prefix-LM masks
+and a ring-buffer KV cache for decode.
+
+Covers every assigned attention variant:
+
+* GQA / MQA / MHA        (num_kv_heads ∈ {1, …, num_heads})
+* QKV biases             (qwen1.5)
+* sliding window         (long-context decode for full-attention archs)
+* prefix-bidirectional   (PaliGemma: image+prompt prefix attends freely)
+* cross-attention        (Whisper decoder ← encoder states)
+
+The KV cache is a fixed-capacity ring buffer: ``pos`` records each
+slot's absolute token position (−1 = empty) so masking works for both
+full caches (capacity = max seq) and windowed caches (capacity = window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_linear, linear, rope_freqs
+
+__all__ = ["KVCache", "init_attention", "attention", "init_cache", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, T, K, hd)
+    v: jax.Array          # (B, T, K, hd)
+    pos: jax.Array        # (T,) int32 absolute positions, −1 = empty
+    idx: jax.Array        # () int32 — number of tokens seen so far
+
+
+def init_attention(key, cfg, cross: bool = False):
+    """Projection params.  ``cross=True`` adds no extra params — K/V come
+    from the encoder via the same wk/wv applied to encoder states."""
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    return {
+        "wq": init_linear(kq, cfg.d_model, cfg.num_heads * hd, cfg.qkv_bias, dt),
+        "wk": init_linear(kk, cfg.d_model, cfg.num_kv_heads * hd, cfg.qkv_bias, dt),
+        "wv": init_linear(kv, cfg.d_model, cfg.num_kv_heads * hd, cfg.qkv_bias, dt),
+        "wo": init_linear(ko, cfg.num_heads * hd, cfg.d_model, False, dt),
+    }
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype=None) -> KVCache:
+    hd = cfg.resolved_head_dim
+    dt = dtype or cfg.jnp_dtype
+    return KVCache(
+        k=jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dt),
+        v=jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dt),
+        pos=jnp.full((capacity,), -1, jnp.int32),
+        idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def _mask_logits(scores, qpos, kpos, *, causal, window, prefix_len):
+    """scores: (..., S, T); qpos: (S,), kpos: (T,) absolute positions."""
+    q = qpos[:, None].astype(jnp.int32)
+    k = kpos[None, :].astype(jnp.int32)
+    ok = k >= 0  # empty cache slots masked
+    if causal:
+        allowed = k <= q
+        if prefix_len:
+            allowed = jnp.logical_or(allowed, jnp.logical_and(k < prefix_len, q < prefix_len))
+        ok = jnp.logical_and(ok, allowed)
+    if window:
+        ok = jnp.logical_and(ok, k > q - window)
+    return jnp.where(ok, scores, NEG_INF)
+
+
+def _sdpa(q, k, v, qpos, kpos, *, causal, window, prefix_len):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd) → (B,S,H,hd).  fp32 softmax.
+
+    K/V stay in their storage dtype inside the einsums with fp32
+    accumulation (``preferred_element_type``) — upcasting the operands
+    would materialize a full fp32 copy of the KV cache, which at
+    decode_32k×MHA is 2× the cache itself (measured: 13 GiB/device;
+    see EXPERIMENTS.md §Perf iteration 2).
+    """
+    b, s, h, hd = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, s, kheads, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _mask_logits(scores, qpos, kpos, causal=causal, window=window,
+                          prefix_len=prefix_len)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+# Prefill sequences longer than this use the blockwise/online-softmax
+# path — the full (S, T) score tensor at 32k² would be hundreds of GiB.
+BLOCKED_SDPA_THRESHOLD = 8192
+_Q_CHUNK = 1024
+_KV_CHUNK = 2048
+
+
+def _sdpa_blocked(q, k, v, qpos, kpos, *, causal, window, prefix_len,
+                  q_chunk: int = _Q_CHUNK, kv_chunk: int = _KV_CHUNK):
+    """Flash-attention-structured SDPA in pure JAX (inference path).
+
+    Outer scan over query chunks × inner scan over KV chunks with the
+    online-softmax recurrence (running max m, denominator l, accumulator
+    acc) — peak memory is one (q_chunk × kv_chunk) score block instead
+    of the full (S × T) tensor.  Used for the no-grad prefill shapes;
+    training (4k) keeps the einsum path.
+    """
+    b, s, h, hd = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    g = h // kheads
+    scale = hd ** -0.5
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    # pad to chunk multiples; padded kpos = −1 masks keys, padded queries
+    # produce garbage rows that are sliced off at the end
+    ps, pt = (-s) % qc, (-t) % kc
+    if ps:
+        q = jnp.pad(q, ((0, 0), (0, ps), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, ps))
+    if pt:
+        k = jnp.pad(k, ((0, 0), (0, pt), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pt), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pt), constant_values=-1)
+    nq, nk = (s + ps) // qc, (t + pt) // kc
+
+    # K/V stay in storage dtype until their chunk is processed — an
+    # upfront fp32 upcast would materialize a full copy of the cache.
+    qg = q.reshape(b, nq, qc, kheads, g, hd)
+    kb = k.reshape(b, nk, kc, kheads, hd)
+    vb = v.reshape(b, nk, kc, kheads, hd)
+    qpb = qpos.reshape(nq, qc)
+    kpb = kpos.reshape(nk, kc)
+
+    def q_block(_, qi):
+        qblk, qp = qi                      # (B,qc,K,G,hd), (qc,)
+
+        def kv_block(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kp = ki            # (B,kc,K,hd), …, (kc,)
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            sc = _mask_logits(sc, qp, kp, causal=causal, window=window,
+                              prefix_len=prefix_len)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kheads, g, qc, hd), jnp.float32)
+        m0 = jnp.full((b, kheads, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kheads, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block, (acc0, m0, l0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)     # (B,K,G,qc,hd)
+        return None, out.transpose(0, 3, 1, 2, 4)        # (B,qc,K,G,hd)
+
+    _, outs = jax.lax.scan(q_block, None, (qg.swapaxes(0, 1), qpb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s + ps, h, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def attention(
+    params,
+    x: jax.Array,                       # (B, S, D)
+    cfg,
+    *,
+    positions: Optional[jax.Array] = None,   # (S,) absolute positions
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    cache: Optional[KVCache] = None,
+    update_cache: bool = False,
+    encoder_states: Optional[jax.Array] = None,  # cross-attention source
+):
+    """One attention layer.  Returns ``(y, new_cache)``.
+
+    Modes:
+      * train/encoder:   cache=None                      (self-attn over x)
+      * prefill:         cache=empty, update_cache=True  (fills ring buffer)
+      * decode:          cache=filled, update_cache=True (S=1 append)
+      * cross-attention: encoder_states given            (keys from encoder)
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+    q = linear(params["wq"], x).reshape(b, s, cfg.num_heads, hd)
+
+    if encoder_states is not None:
+        # Cross-attention: K/V from encoder, no RoPE/causality/cache.
+        t = encoder_states.shape[1]
+        k = linear(params["wk"], encoder_states).reshape(b, t, cfg.num_kv_heads, hd)
+        v = linear(params["wv"], encoder_states).reshape(b, t, cfg.num_kv_heads, hd)
+        kpos = jnp.arange(t, dtype=jnp.int32)
+        out = _sdpa(q, k, v, positions, kpos, causal=False, window=0, prefix_len=0)
+        return linear(params["wo"], out.reshape(b, s, -1)), cache
+
+    k = linear(params["wk"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    v = linear(params["wv"], x).reshape(b, s, cfg.num_kv_heads, hd)
+
+    if cfg.use_rope:
+        cos, sin = rope_freqs(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    sdpa = _sdpa_blocked if s > BLOCKED_SDPA_THRESHOLD else _sdpa
+
+    if cache is None:
+        out = sdpa(q, k, v, positions, positions, causal=causal, window=window,
+                   prefix_len=prefix_len)
+        return linear(params["wo"], out.reshape(b, s, -1)), None
+
+    capacity = cache.k.shape[1]
+    if update_cache:
+        # Ring-buffer append of the s new tokens (s=1 decode, s=S prefill).
+        # If the prompt exceeds the ring (windowed cache), only the last
+        # `capacity` tokens survive — write exactly those (duplicate slot
+        # scatter order is undefined, so never write a slot twice).
+        if s > capacity:
+            k_w, v_w = k[:, s - capacity:], v[:, s - capacity:]
+            pos_w = positions[s - capacity:]
+            offs = jnp.arange(s - capacity, s, dtype=jnp.int32)
+        else:
+            k_w, v_w, pos_w = k, v, positions
+            offs = jnp.arange(s, dtype=jnp.int32)
+        slots = (cache.idx + offs) % capacity
+        new_k = cache.k.at[:, slots].set(k_w.astype(cache.k.dtype))
+        new_v = cache.v.at[:, slots].set(v_w.astype(cache.v.dtype))
+        new_pos = cache.pos.at[slots].set(pos_w.astype(jnp.int32))
+        cache = KVCache(new_k, new_v, new_pos, cache.idx + s)
+
+    if s > 1:
+        # Prefill: attend over the full prompt's local K/V (the ring cache
+        # may hold only the trailing window — middle queries must still
+        # see their own context).  The cache is read only at decode.
+        out = sdpa(q, k, v, positions, positions, causal=causal,
+                   window=window, prefix_len=prefix_len)
+    else:
+        # Decode: flash-decoding for long caches — scanning the cache in
+        # kv chunks keeps the fp32 score/conversion working set at one
+        # chunk instead of the whole cache (§Perf decode iterations).
+        dec_sdpa = (_sdpa_blocked if cache.k.shape[1] > BLOCKED_SDPA_THRESHOLD
+                    else _sdpa)
+        out = dec_sdpa(q, cache.k, cache.v, positions, cache.pos, causal=causal,
+                       window=window, prefix_len=prefix_len)
+    return linear(params["wo"], out.reshape(b, s, -1)), cache

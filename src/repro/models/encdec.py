@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature
+extractor is a stub: the model consumes precomputed frame embeddings
+``(B, T_frames, d_model)`` (Whisper-tiny: T_frames = 1500 after the
+conv stack's 2× downsampling of 3000 mel frames).
+
+Encoder: non-causal self-attention + GELU FFN, LayerNorm, sinusoidal
+positions.  Decoder: causal self-attention + cross-attention over the
+encoder output + GELU FFN, learned positions.  Both stacks are scanned.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache, attention, init_attention, init_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, init_embedding, init_norm, linear
+from repro.models.mlp import ffn, init_ffn
+from repro.sharding.activations import BATCH, MODEL, constrain
+
+__all__ = [
+    "init_encdec",
+    "encode",
+    "encdec_loss",
+    "encdec_prefill",
+    "encdec_decode",
+    "init_decoder_caches",
+]
+
+
+def _sinusoid(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jnp_dtype
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm, dt),
+        "attn": init_attention(k1, cfg),
+        "norm2": init_norm(cfg.d_model, cfg.norm, dt),
+        "ffn": init_ffn(k2, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.jnp_dtype
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm, dt),
+        "self_attn": init_attention(k1, cfg),
+        "norm_x": init_norm(cfg.d_model, cfg.norm, dt),
+        "cross_attn": init_attention(k2, cfg),
+        "norm2": init_norm(cfg.d_model, cfg.norm, dt),
+        "ffn": init_ffn(k3, cfg),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    dt = cfg.jnp_dtype
+    max_pos = cfg.max_position or 4096
+    return {
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm, dt),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": init_norm(cfg.d_model, cfg.norm, dt),
+        "embed": init_embedding(kt, cfg.vocab_size, cfg.d_model, dt),
+        "pos_embed": init_embedding(kp, max_pos, cfg.d_model, dt),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, remat: bool = True):
+    """frames: (B, T, d) stubbed conv-frontend output → encoder states."""
+    x = frames.astype(cfg.jnp_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, BATCH, None, None)
+
+    def body(x, layer):
+        h = apply_norm(layer["norm1"], x, cfg.norm)
+        y, _ = attention(layer["attn"], h, cfg, causal=False)
+        x = x + y
+        h = apply_norm(layer["norm2"], x, cfg.norm)
+        return x + ffn(layer["ffn"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_sublayer(layer, x, cfg, enc_states, positions, cache=None,
+                  update_cache=False, window: int = 0):
+    h = apply_norm(layer["norm1"], x, cfg.norm)
+    y, cache = attention(layer["self_attn"], h, cfg, positions=positions,
+                         causal=True, window=window, cache=cache,
+                         update_cache=update_cache)
+    x = x + y
+    h = apply_norm(layer["norm_x"], x, cfg.norm)
+    y, _ = attention(layer["cross_attn"], h, cfg, positions=positions,
+                     encoder_states=enc_states)
+    x = x + y
+    h = apply_norm(layer["norm2"], x, cfg.norm)
+    return x + ffn(layer["ffn"], h, cfg), cache
+
+
+def _dec_embed(params, cfg, tokens, positions):
+    x = params["embed"]["embedding"][tokens]
+    max_pos = params["pos_embed"]["embedding"].shape[0]
+    x = x + params["pos_embed"]["embedding"][positions % max_pos][None]
+    return constrain(x, BATCH, None, None)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch, window: Optional[int] = None):
+    """batch: dict(embeds=(B,T,d) frames, tokens=(B,S), labels=(B,S))."""
+    enc = encode(params, cfg, batch["embeds"])
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = _dec_embed(params, cfg, tokens, positions)
+    win = cfg.window if window is None else window
+
+    def body(x, layer):
+        x, _ = _dec_sublayer(layer, x, cfg, enc, positions, window=win)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    logits = (x.astype(jnp.float32)
+              @ params["embed"]["embedding"].astype(jnp.float32).T)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None].astype(jnp.int32),
+                               axis=-1)
+    return jnp.mean(nll)
+
+
+class DecCaches(NamedTuple):
+    self_caches: KVCache       # stacked (L, ...)
+    enc_states: jax.Array      # (B, T_enc, d)
+
+
+def init_decoder_caches(cfg: ModelConfig, batch: int, capacity: int,
+                        enc_states: jax.Array) -> DecCaches:
+    single = init_cache(cfg, batch, capacity)
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape).copy(),
+        single)
+    return DecCaches(self_caches=stacked, enc_states=enc_states)
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens,
+                   capacity: Optional[int] = None, window: Optional[int] = None):
+    """Encode audio + consume the decoder prompt → (last logits, caches)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    cap = capacity or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = _dec_embed(params, cfg, tokens, positions)
+    caches = init_decoder_caches(cfg, b, cap, enc)
+    win = cfg.window if window is None else window
+
+    def body(x, slices):
+        layer, cache = slices
+        x, nc = _dec_sublayer(layer, x, cfg, enc, positions, cache=cache,
+                              update_cache=True, window=win)
+        return x, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches.self_caches))
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    logits = (x[:, -1:].astype(jnp.float32)
+              @ params["embed"]["embedding"].astype(jnp.float32).T)
+    return logits, DecCaches(self_caches=new_caches, enc_states=enc)
+
+
+def encdec_decode(params, cfg: ModelConfig, token, caches: DecCaches, position,
+                  window: Optional[int] = None):
+    positions = jnp.asarray(position, jnp.int32).reshape(1)
+    x = _dec_embed(params, cfg, token, positions)
+    win = cfg.window if window is None else window
+
+    def body(x, slices):
+        layer, cache = slices
+        x, nc = _dec_sublayer(layer, x, cfg, caches.enc_states, positions,
+                              cache=cache, update_cache=True, window=win)
+        return x, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches.self_caches))
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    logits = (x.astype(jnp.float32)
+              @ params["embed"]["embedding"].astype(jnp.float32).T)
+    return logits, DecCaches(self_caches=new_caches, enc_states=caches.enc_states)

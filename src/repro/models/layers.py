@@ -1,0 +1,94 @@
+"""Primitive layers: linear, norms, embeddings, rotary position encoding.
+
+Parameters are plain dict pytrees; every ``init_*`` consumes a PRNGKey
+and returns params, every ``*_apply`` is a pure function.  Layer stacks
+store params with a leading stacked-layer axis and run under
+``lax.scan`` (small HLO, fast compile, remat-friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_linear",
+    "linear",
+    "init_norm",
+    "rmsnorm",
+    "layernorm",
+    "init_embedding",
+    "rope_freqs",
+    "apply_rope",
+]
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.bfloat16,
+                scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-ish; matches common LM inits)."""
+    if scale is None:
+        scale = d_in ** -0.5
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+         * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int, kind: str = "rmsnorm", dtype=jnp.bfloat16):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(p, x, kind: str):
+    return layernorm(p, x) if kind == "layernorm" else rmsnorm(p, x)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    e = (jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)).astype(dtype)
+    return {"embedding": e}
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """→ (cos, sin) of shape ``positions.shape + (head_dim/2,)`` (float32)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (split-half convention).  x: (..., S, H, head_dim)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # cos/sin: (..., S, half) → broadcast over the head axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)

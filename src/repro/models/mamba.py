@@ -1,0 +1,172 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b, jamba mamba layers).
+
+TPU adaptation of the CUDA selective-scan: a **chunked associative
+scan** — an outer ``lax.scan`` over time chunks carries the SSM state
+``h (B, d_inner, N)``, and inside each chunk the linear recurrence
+
+    h_t = Ā_t ⊙ h_{t−1} + (Δ_t x_t) ⊗ B_t,   y_t = ⟨h_t, C_t⟩ + D x_t
+
+is evaluated with ``jax.lax.associative_scan`` over the chunk axis
+(first-order recurrence composition (a₁,b₁)∘(a₂,b₂) = (a₁a₂, a₂b₁+b₂)).
+The chunk size bounds the materialized (chunk, d_inner, N) state tensor
+to VMEM-friendly sizes; the sequential outer loop keeps backward-pass
+residuals at one state per chunk boundary.
+
+Decode is the exact single-step recurrence with a (B, d_inner, N) state
+cache and a (B, conv−1, d_inner) rolling conv window — O(1) per token,
+which is why the SSM archs run ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+__all__ = ["MambaCache", "init_mamba", "mamba_block", "mamba_decode_step", "init_mamba_cache"]
+
+_CHUNK = 64
+
+
+class MambaCache(NamedTuple):
+    h: jax.Array       # (B, d_inner, N) SSM state (float32)
+    conv: jax.Array    # (B, conv_width−1, d_inner) rolling conv inputs
+
+
+def init_mamba(key, cfg):
+    dt = cfg.jnp_dtype
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    r, cw = cfg.resolved_dt_rank, cfg.ssm_conv
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # S4-style A init: A[:, j] = −(j+1) (real negative diagonal)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": init_linear(k1, d, 2 * di, False, dt),
+        "conv_w": (jax.random.truncated_normal(k2, -2.0, 2.0, (cw, di), jnp.float32)
+                   * (cw ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_linear(k3, di, r + 2 * n, False, dt),
+        "dt_proj": init_linear(k4, r, di, True, dt, scale=r ** -0.5),
+        "a_log": jnp.log(a),                       # (di, N) float32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(k5, di, d, False, dt, scale=di ** -0.5),
+    }
+
+
+def _ssm_params(params, xc, cfg):
+    """Input-dependent Δ, B, C from the conv output xc (…, di)."""
+    n, r = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = linear(params["x_proj"], xc)
+    dt_raw, b, c = jnp.split(proj, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(linear(params["dt_proj"], dt_raw).astype(jnp.float32))
+    return delta, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(params, x, cfg, history=None):
+    """Depthwise causal conv over time.  x: (B, S, di)."""
+    cw = cfg.ssm_conv
+    if history is None:
+        history = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)          # (B, S+cw−1, di)
+    w = params["conv_w"].astype(jnp.float32)            # (cw, di)
+    out = jnp.zeros(x.shape, jnp.float32)
+    for j in range(cw):
+        out = out + xp[:, j:j + x.shape[1]].astype(jnp.float32) * w[j]
+    out = out + params["conv_b"].astype(jnp.float32)
+    new_hist = xp[:, xp.shape[1] - (cw - 1):]
+    return jax.nn.silu(out).astype(x.dtype), new_hist
+
+
+def mamba_block(params, x, cfg, h0=None, conv_hist=None):
+    """Full-sequence mamba block.  x: (B, S, d) → (B, S, d), final cache.
+
+    S must be a multiple of the chunk size (pad upstream if not).
+    """
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = linear(params["in_proj"], x)
+    xpart, z = jnp.split(xz, 2, axis=-1)
+    xc, new_hist = _causal_conv(params, xpart, cfg, conv_hist)
+
+    delta, bmat, cmat = _ssm_params(params, xc, cfg)    # (B,S,di),(B,S,n),(B,S,n)
+    a = -jnp.exp(params["a_log"])                       # (di, n)
+
+    chunk = min(_CHUNK, s)
+    pad = (-s) % chunk
+    s_pad = s + pad
+    if pad:
+        # Zero Δ on padded steps → Ā = exp(0·A) = 1, B̄x = 0: the state
+        # passes through padding untouched, so the carried h stays exact.
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xc_s, delta, bmat, cmat = map(padf, (xc, delta, bmat, cmat))
+        mask = (jnp.arange(s_pad) < s).astype(jnp.float32)
+        delta = delta * mask[None, :, None]
+    else:
+        xc_s = xc
+    nchunks = s_pad // chunk
+
+    def reshape_c(t):
+        return t.reshape(b, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xcs, deltas, bs, cs = map(reshape_c, (xc_s.astype(jnp.float32), delta, bmat, cmat))
+
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def chunk_step(h, inputs):
+        xck, dk, bk, ck = inputs                        # (B,chunk,di),(B,chunk,di),(B,chunk,n)…
+        abar = jnp.exp(dk[..., None] * a)               # (B,chunk,di,n)
+        bx = (dk * xck)[..., None] * bk[:, :, None, :]  # (B,chunk,di,n)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        # seed the scan with the carried state folded into step 0
+        bx0 = bx.at[:, 0].add(abar[:, 0] * h)
+        acc_a, acc_b = jax.lax.associative_scan(combine, (abar, bx0), axis=1)
+        hs = acc_b                                      # (B,chunk,di,n)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, ck)         # (B,chunk,di)
+        return hs[:, -1], y
+
+    hf, ys = jax.lax.scan(chunk_step, h0, (xcs, deltas, bs, cs))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, di)[:, :s]
+    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = linear(params["out_proj"], y.astype(x.dtype))
+    return out, MambaCache(h=hf, conv=new_hist)
+
+
+def init_mamba_cache(cfg, batch: int) -> MambaCache:
+    return MambaCache(
+        h=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), cfg.jnp_dtype),
+    )
+
+
+def mamba_decode_step(params, x, cfg, cache: MambaCache):
+    """Single-token recurrence.  x: (B, 1, d) → (B, 1, d), new cache."""
+    b = x.shape[0]
+    di, n, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = linear(params["in_proj"], x[:, 0])             # (B, 2di)
+    xpart, z = jnp.split(xz, 2, axis=-1)
+
+    # rolling conv window
+    window = jnp.concatenate([cache.conv, xpart[:, None, :]], axis=1)  # (B,cw,di)
+    w = params["conv_w"].astype(jnp.float32)
+    xc = jnp.sum(window.astype(jnp.float32) * w[None], axis=1) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)                                # (B, di)
+
+    delta, bmat, cmat = _ssm_params(params, xc.astype(x.dtype), cfg)
+    a = -jnp.exp(params["a_log"])
+    abar = jnp.exp(delta[..., None] * a)                # (B,di,n)
+    bx = (delta * xc)[..., None] * bmat[:, None, :]     # (B,di,n)
+    h = abar * cache.h + bx
+    y = jnp.einsum("bdn,bn->bd", h, cmat)
+    y = y + params["d_skip"] * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = linear(params["out_proj"], y.astype(x.dtype))
+    return out[:, None, :], MambaCache(h=h, conv=window[:, 1:])

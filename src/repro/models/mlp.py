@@ -1,0 +1,42 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen), GeGLU (gemma), GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+__all__ = ["init_ffn", "ffn"]
+
+
+def init_ffn(key, cfg):
+    dt = cfg.jnp_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_linear(k1, cfg.d_model, cfg.d_ff, False, dt),
+            "w_up": init_linear(k2, cfg.d_model, cfg.d_ff, False, dt),
+            "w_down": init_linear(k3, cfg.d_ff, cfg.d_model, False, dt,
+                                  scale=cfg.d_ff ** -0.5),
+        }
+    # non-gated MLP: gelu (whisper, biases) or relu² (nemotron/minitron)
+    bias = cfg.activation == "gelu"
+    return {
+        "w_up": init_linear(k1, cfg.d_model, cfg.d_ff, bias, dt),
+        "w_down": init_linear(k2, cfg.d_ff, cfg.d_model, bias, dt,
+                              scale=cfg.d_ff ** -0.5),
+    }
+
+
+def ffn(params, x, cfg):
+    if cfg.activation in ("swiglu", "geglu"):
+        gate = linear(params["w_gate"], x)
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        return linear(params["w_down"], act * linear(params["w_up"], x))
+    h = linear(params["w_up"], x)
+    if cfg.activation == "relu2":
+        a = jax.nn.relu(h)
+        h = a * a
+    else:
+        h = jax.nn.gelu(h)
+    return linear(params["w_down"], h)

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN with GShard-style capacity-based dispatch.
+
+Top-k routing (qwen3 / jamba style: softmax over the selected k logits),
+fixed per-expert capacity C = ⌈T·k/E⌉·capacity_factor, overflow tokens
+dropped (their FFN contribution is zero — residual passes through).
+
+Dispatch is scatter/gather based, sized (E, C, d):
+
+    1. router logits (T, E) → top-k experts + normalized probs per token
+    2. position-in-expert via cumsum over the one-hot assignment
+    3. gather tokens into the (E, C, d) expert buffer
+    4. grouped einsum  (E,C,d)·(E,d,f) → SwiGLU → (E,C,f)·(E,f,d)
+    5. scatter-add back to (T, d), weighted by router prob
+
+Sharding: the expert axis E is model-parallel (expert parallelism); the
+token axis is data-parallel.  Step 3/5 induce the all-to-all that
+defines MoE communication cost — visible in the roofline's collective
+term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear
+from repro.sharding.activations import MODEL, constrain
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg):
+    dt = cfg.jnp_dtype
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+
+    def expert_mat(k, shape, scale):
+        return (jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32)
+                * scale).astype(dt)
+
+    return {
+        "router": init_linear(kr, d, e, False, jnp.float32),  # router in fp32
+        "w_gate": expert_mat(kg, (e, d, f), scale_in),
+        "w_up": expert_mat(ku, (e, d, f), scale_in),
+        "w_down": expert_mat(kd, (e, f, d), scale_out),
+    }
+
+
+def moe_ffn(params, x, cfg, dropless: bool = False):
+    """x: (B, S, d) → (B, S, d), plus aux dict with load-balance stats.
+
+    ``dropless=True`` sets capacity = T (no token ever dropped) — used
+    for decode steps, where T is small and quality matters per token.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"]["w"])        # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)                             # (T, k)
+    probs = jax.nn.softmax(topv, axis=-1)                             # normalize over k
+
+    if dropless:
+        capacity = t
+    else:
+        capacity = int(min(t, max(1, round(t * k / e * cfg.capacity_factor))))
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)                 # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat                   # (T·k, E)
+    pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(t, k)        # (T, k)
+    expert = topi                                                     # (T, k)
+    keep = pos < capacity                                             # overflow drop
+
+    # ---- gather tokens into the (E, C, d) buffer ----
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    safe_e = jnp.where(keep, expert, 0)
+    safe_p = jnp.where(keep, pos, 0)
+    contrib = jnp.where(keep[..., None], xt[tok_idx], 0).astype(x.dtype)
+    buf = buf.at[safe_e, safe_p].add(contrib)                         # (E, C, d)
+    buf = constrain(buf, MODEL, None, None)  # expert-parallel dispatch
+
+    # ---- grouped expert computation (expert-parallel einsums) ----
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", act, params["w_down"])       # (E, C, d)
+
+    # ---- scatter back, weighted by router probability ----
+    gathered = out_buf[safe_e, safe_p]                                # (T, k, d)
+    weighted = gathered.astype(jnp.float32) * jnp.where(keep, probs, 0.0)[..., None]
+    yt = jnp.sum(weighted, axis=1).astype(x.dtype)                    # (T, d)
+
+    # load-balance aux (Switch-style): mean prob × mean assignment per expert
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)            # (E,)
+    ce = jnp.mean(jnp.sum(onehot, axis=1).astype(jnp.float32), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+
+    return yt.reshape(b, s, d), {"moe_aux_loss": aux_loss,
+                                 "moe_dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}

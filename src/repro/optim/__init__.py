@@ -1,0 +1,12 @@
+"""Optimizers (no optax dependency): SGD, momentum, Adam(W), schedules.
+
+The FedScalar client stage uses plain SGD (Algorithm 1 line 19); the
+centralized-baseline example and beyond-paper ablations use Adam.
+All optimizers are (init, update) pairs over pytrees.
+"""
+from repro.optim.sgd import sgd, sgd_momentum
+from repro.optim.adam import adam, adamw
+from repro.optim.schedule import constant, cosine_decay, warmup_cosine
+
+__all__ = ["sgd", "sgd_momentum", "adam", "adamw",
+           "constant", "cosine_decay", "warmup_cosine"]

@@ -1,0 +1,42 @@
+"""Adam / AdamW with fp32 moments (params may be bf16)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    def init(params):
+        z = lambda w: jnp.zeros(w.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(w, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * w.astype(jnp.float32)
+            return (w.astype(jnp.float32) - lr * upd).astype(w.dtype)
+
+        new_params = jax.tree_util.tree_map(step, params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw):
+    return adam(lr, weight_decay=weight_decay, **kw)

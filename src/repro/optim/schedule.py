@@ -1,0 +1,26 @@
+"""Learning-rate schedules as step → lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        frac = jnp.clip(step / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+    return f
+
+
+def warmup_cosine(lr, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        w = jnp.clip(step / max(warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, jnp.float32(lr) * w,
+                         decay(step - warmup_steps))
+    return f

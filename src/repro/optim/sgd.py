@@ -1,0 +1,37 @@
+"""Plain SGD and heavy-ball momentum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd(lr):
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new_params = jax.tree_util.tree_map(
+            lambda w, g: w - lr * g.astype(w.dtype), params, grads)
+        return new_params, state
+
+    return init, update
+
+
+def sgd_momentum(lr, beta: float = 0.9, nesterov: bool = False):
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step = jax.tree_util.tree_map(
+                lambda m, g: beta * m + g.astype(jnp.float32), new_m, grads)
+        else:
+            step = new_m
+        new_params = jax.tree_util.tree_map(
+            lambda w, s: (w - lr * s).astype(w.dtype), params, step)
+        return new_params, new_m
+
+    return init, update

@@ -1,0 +1,93 @@
+"""Activation sharding constraints (logical-axis style, MaxText-ish).
+
+XLA's sharding propagation loses the batch sharding at gathers (token
+embedding lookups) and other reshape boundaries, silently replicating
+every downstream activation.  Model code therefore pins key activations
+with ``constrain(x, BATCH, None, MODEL)``-style calls.
+
+The helpers are **mesh-agnostic and no-op off-mesh**: logical axes are
+resolved against the ambient abstract mesh — ``BATCH`` maps to whichever
+of ('pod', 'data') exist, ``MODEL`` to 'model' — and if the surrounding
+computation has no mesh (CPU smoke tests, the digits simulation) the
+constraint disappears.  Axes are also dropped when the dim size is not
+divisible by the mesh axis size (e.g. batch=1 long-context decode).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["BATCH", "MODEL", "constrain", "batch_over_model"]
+
+BATCH = "__batch__"
+MODEL = "__model__"
+
+# Hillclimb layout modes for the BATCH logical axis:
+#   "dp"      (baseline): BATCH → ('pod','data')
+#   "dp256":             BATCH → ('pod','data','model') — all chips
+#                        data-parallel the batch (no model-axis compute
+#                        replication)
+#   "off":               BATCH constraints no-op (client-parallel
+#                        placement owns the data axis for the client dim)
+_BATCH_MODE = ["dp"]
+
+
+@contextlib.contextmanager
+def batch_mode(mode: str):
+    assert mode in ("dp", "dp256", "off")
+    prev = _BATCH_MODE[0]
+    _BATCH_MODE[0] = mode
+    try:
+        yield
+    finally:
+        _BATCH_MODE[0] = prev
+
+
+def batch_over_model():
+    return batch_mode("dp256")
+
+
+def _ambient_axes():
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return None
+    return dict(zip(m.axis_names, m.axis_sizes))
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axes; identity when meshless.
+
+    ``logical`` has one entry per dim of ``x``: BATCH, MODEL or None.
+    """
+    axes = _ambient_axes()
+    if axes is None:
+        return x
+    spec = []
+    for dim, l in zip(x.shape, logical):
+        if l == BATCH:
+            mode = _BATCH_MODE[0]
+            if mode == "off":
+                spec.append(None)
+                continue
+            names = ("pod", "data", "model") if mode == "dp256" else ("pod", "data")
+            dp = tuple(a for a in names if a in axes)
+            n = 1
+            for a in dp:
+                n *= axes[a]
+            if dp and dim % n == 0 and dim >= n:
+                spec.append(dp if len(dp) > 1 else dp[0])
+            elif "data" in axes and dim % axes["data"] == 0 and dim >= axes["data"]:
+                spec.append("data")
+            else:
+                spec.append(None)
+        elif l == MODEL:
+            n = axes.get("model", 1)
+            if n > 1 and dim % n == 0 and dim >= n:
+                spec.append("model")
+            else:
+                spec.append(None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

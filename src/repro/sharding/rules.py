@@ -1,0 +1,165 @@
+"""Partition-spec assignment for params, inputs and caches.
+
+Baseline layout (every arch × shape lowers with this; the hillclimb
+then specializes the three chosen pairs):
+
+* **Weights: 2-D fully-sharded (ZeRO-3 style).**  For each weight leaf,
+  the largest eligible dim divisible by the mesh's ``model`` size is
+  model-sharded, and the largest remaining dim divisible by ``data`` is
+  data-sharded.  Stacked-layer leading axes (scan) are never sharded.
+  Exception: MoE expert tensors (E, d, f) put the expert axis on
+  ``model`` — expert parallelism — before the generic rule runs.
+* **Activations: batch over ('pod','data').**  batch=1 shapes
+  (long_500k) leave activations unsharded and rely on weight sharding.
+* **KV caches:** batch over data, head_dim over model (head counts are
+  not uniformly divisible by 16 across the assigned archs — head_dim
+  always is).  Mamba states shard d_inner over model.
+
+Small leaves (< 2¹⁶ elements: norms, biases, scalars) stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "input_specs_sharding", "batch_spec", "named"]
+
+_MIN_SHARD_ELEMS = 1 << 16
+
+# pytree path components whose subtrees carry a stacked leading layer axis
+_STACKED_MARKERS = ("period", "enc_layers", "dec_layers", "self_caches", "caches")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _is_stacked(pstr: str) -> bool:
+    return any(m in pstr for m in _STACKED_MARKERS)
+
+
+def _leaf_spec(pstr: str, shape, data: int, model: int, num_experts: int) -> P:
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    start = 1 if (_is_stacked(pstr) and ndim > 1) else 0
+    size = 1
+    for s in shape:
+        size *= s
+    if size < _MIN_SHARD_ELEMS:
+        return P(*spec)
+
+    dims = list(range(start, ndim))
+    # MoE expert tensors: expert axis → model (expert parallelism).
+    if num_experts and ndim - start == 3 and shape[start] == num_experts:
+        if num_experts % model == 0:
+            spec[start] = "model"
+        # FSDP the largest remaining dim over data
+        if data > 1:
+            rest = sorted(dims[1:], key=lambda i: -shape[i])
+            for i in rest:
+                if shape[i] % data == 0:
+                    spec[i] = "data"
+                    break
+        return P(*spec)
+
+    by_size = sorted(dims, key=lambda i: -shape[i])
+    if model > 1:
+        for i in by_size:
+            if shape[i] % model == 0:
+                spec[i] = "model"
+                break
+    if data > 1:
+        for i in by_size:
+            if spec[i] is None and shape[i] % data == 0:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_specs(param_shapes: Any, mesh: Mesh, num_experts: int = 0,
+                layout: str = "zero3"):
+    """→ pytree of PartitionSpec matching ``param_shapes`` (ShapeDtypeStructs).
+
+    layout='zero3' (baseline): weights 2-D sharded over (data × model) —
+    gathered per use.  layout='tp': weights sharded over model only —
+    resident tensor-parallel shards, no data-axis gathers (the hillclimb
+    layout for decode; costs 16× more HBM residency for params).
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data, model = axes.get("data", 1), axes.get("model", 1)
+    if layout == "tp":
+        data = 1  # disable the FSDP dim
+
+    def assign(path, leaf):
+        return _leaf_spec(_path_str(path), leaf.shape, data, model, num_experts)
+
+    return jax.tree_util.tree_map_with_path(assign, param_shapes)
+
+
+def batch_spec(mesh: Mesh, global_batch: int):
+    """Batch-axis spec over ('pod','data') — or replicated if indivisible."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = [a for a in ("pod", "data") if a in axes]
+    n = 1
+    for a in dp:
+        n *= axes[a]
+    if global_batch % n == 0 and global_batch >= n:
+        return tuple(dp)
+    # try data only
+    if "data" in axes and global_batch % axes["data"] == 0:
+        return ("data",)
+    return None
+
+
+def input_specs_sharding(inputs: Any, mesh: Mesh, global_batch: int):
+    """Shardings for a dry-run input pytree (batch dicts / caches / scalars).
+
+    Per leaf: the first dim whose extent equals ``global_batch`` becomes
+    the batch axis (over ('pod','data')); then, walking from the last
+    dim backward, the first dim with extent ≥ 64 divisible by ``model``
+    is model-sharded (KV head_dim, mamba d_inner, embedding width).
+    Scalars / small leaves (positions, ring indices) stay replicated.
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axes.get("model", 1)
+    dp = batch_spec(mesh, global_batch)
+
+    def assign(path, leaf):
+        del path
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim == 0:
+            return P()
+        size = 1
+        for s in shape:
+            size *= s
+        spec: list = [None] * ndim
+        if size < _MIN_SHARD_ELEMS:
+            return P(*spec)
+        batch_dim = None
+        if dp is not None and global_batch > 1:
+            for d in range(ndim):
+                if shape[d] == global_batch:
+                    batch_dim = d
+                    spec[d] = dp
+                    break
+        # model-shard float data only (token/label int arrays keep their
+        # sequence dim whole — they feed embedding gathers)
+        if jax.numpy.issubdtype(leaf.dtype, jax.numpy.floating):
+            for d in range(ndim - 1, -1, -1):
+                if d == batch_dim:
+                    continue
+                if shape[d] >= 64 and shape[d] % model == 0:
+                    spec[d] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, inputs)
+
+
+def named(mesh: Mesh, spec_tree: Any):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

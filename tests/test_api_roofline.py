@@ -1,0 +1,129 @@
+"""Arch API shape plumbing + roofline model invariants + whisper serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.models.api import INPUT_SHAPES, LONG_WINDOW
+
+
+def test_input_shapes_table():
+    assert INPUT_SHAPES["train_4k"] == (4096, 256, "train")
+    assert INPUT_SHAPES["prefill_32k"] == (32768, 32, "prefill")
+    assert INPUT_SHAPES["decode_32k"] == (32768, 128, "decode")
+    assert INPUT_SHAPES["long_500k"] == (524288, 1, "decode")
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_train_specs_match_assignment(name):
+    arch = get_arch(name)
+    specs = arch.input_specs("train_4k")
+    tokens = specs["batch"]["tokens"]
+    assert tokens.shape[0] == 256
+    total = tokens.shape[1] + (arch.cfg.num_frontend_tokens
+                               if arch.cfg.frontend == "vision" else 0)
+    assert total == 4096
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_long_decode_cache_is_bounded(name):
+    """long_500k cache capacity: LONG_WINDOW for attention archs (the
+    sliding-window carve-out); SSM state is O(1) regardless."""
+    arch = get_arch(name)
+    specs = arch.input_specs("long_500k")
+    leaves = jax.tree_util.tree_leaves(specs["caches"])
+    biggest = max(l.size for l in leaves)
+    if arch.cfg.num_heads:
+        assert arch.decode_window(524288) == LONG_WINDOW
+    # no cache leaf is ever O(500k × heads × head_dim × layers) unbounded
+    assert biggest < 4e9, (name, biggest)
+
+
+def test_roofline_terms_positive_and_consistent():
+    from repro.launch.roofline import (
+        active_param_count,
+        analytic_terms,
+        param_count,
+    )
+    for name in ("granite-8b", "qwen3-moe-30b-a3b", "falcon-mamba-7b"):
+        n = param_count(name)
+        na = active_param_count(name)
+        assert 0 < na <= n
+        for shape in INPUT_SHAPES:
+            t = analytic_terms(name, shape)
+            assert t["compute_s"] > 0 and t["memory_s"] > 0
+            assert t["collective_s"] >= 0
+            assert t["dominant"] in ("compute", "memory", "collective")
+            assert 0 < t["roofline_fraction"] <= 1
+    # MoE: active ≪ total
+    assert active_param_count("qwen3-moe-30b-a3b") < 0.25 * param_count(
+        "qwen3-moe-30b-a3b")
+
+
+def test_tp_layout_strictly_cuts_decode_collective():
+    from repro.launch.roofline import analytic_terms
+    base = analytic_terms("qwen1.5-4b", "decode_32k", layout="zero3")
+    tp = analytic_terms("qwen1.5-4b", "decode_32k", layout="tp")
+    assert tp["collective_s"] < 0.1 * base["collective_s"]
+    assert tp["memory_s"] < base["memory_s"]
+
+
+def test_param_counts_plausible():
+    """Sanity: configured dims land near the advertised sizes."""
+    from repro.launch.roofline import param_count
+    approx = {
+        "smollm-360m": (0.3e9, 0.5e9),
+        "granite-8b": (7e9, 9.5e9),
+        "falcon-mamba-7b": (6e9, 8.5e9),
+        "qwen3-moe-30b-a3b": (25e9, 36e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = param_count(name)
+        assert lo < n < hi, (name, n)
+
+
+def test_whisper_serve_consistency():
+    """Enc-dec: prefill + decode logits equal the training forward."""
+    from repro.models.encdec import (
+        encdec_decode,
+        encdec_loss,
+        encdec_prefill,
+        init_encdec,
+    )
+    from repro.models.config import ModelConfig
+    import repro.models.encdec as ed
+    import jax.nn
+
+    cfg = ModelConfig(name="w", arch_type="encdec", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+                      encoder_layers=2, encoder_seq=24, frontend="audio",
+                      norm="layernorm", activation="gelu", use_rope=False,
+                      max_position=256, qkv_bias=True, tie_embeddings=True,
+                      dtype="float32")
+    p = init_encdec(cfg, jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64))
+    S = 20
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, S + 2), 0, 128)
+
+    # reference: full decoder forward logits at position S-1 and S
+    enc = ed.encode(p, cfg, frames)
+    pos = jnp.arange(S + 2, dtype=jnp.int32)
+    x = ed._dec_embed(p, cfg, tokens, pos)
+
+    def body(x, layer):
+        x, _ = ed._dec_sublayer(layer, x, cfg, enc, pos)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, p["dec_layers"])
+    x = ed.apply_norm(p["dec_norm"], x, cfg.norm)
+    full = x.astype(jnp.float32) @ p["embed"]["embedding"].astype(jnp.float32).T
+
+    lp, caches = encdec_prefill(p, cfg, frames, tokens[:, :S], capacity=S + 4)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(full[:, S - 1]),
+                               rtol=1e-4, atol=1e-4)
+    lg, caches = encdec_decode(p, cfg, tokens[:, S:S + 1], caches, jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, S]),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,212 @@
+"""Component-level oracles: attention masks, mamba scan, MoE dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import _sdpa, _sdpa_blocked, attention, init_attention, init_cache
+from repro.models.config import ModelConfig
+from repro.models.mamba import init_mamba, init_mamba_cache, mamba_block, mamba_decode_step
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.mlp import ffn, init_ffn
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _qkv(s=64, b=2, h=4, kh=2, hd=16):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (b, s, h, hd)),
+            jax.random.normal(ks[1], (b, s, kh, hd)),
+            jax.random.normal(ks[2], (b, s, kh, hd)))
+
+
+def _naive_attention(q, k, v, *, causal, window, prefix_len):
+    """O(S²) per-element loop oracle in numpy."""
+    q, k, v = map(lambda t: np.asarray(t, np.float64), (q, k, v))
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    out = np.zeros_like(q)
+    for bi in range(b):
+        for hi in range(h):
+            ki = hi // g
+            sc = q[bi, :, hi] @ k[bi, :, ki].T / np.sqrt(hd)
+            for qq in range(s):
+                for kk in range(s):
+                    ok = True
+                    if causal and kk > qq:
+                        ok = prefix_len and kk < prefix_len and qq < prefix_len
+                    if window and kk <= qq - window:
+                        ok = False
+                    if not ok:
+                        sc[qq, kk] = -1e30
+            p = np.exp(sc - sc.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[bi, :, hi] = p @ v[bi, :, ki]
+    return out
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True, window=0, prefix_len=0),
+    dict(causal=True, window=8, prefix_len=0),
+    dict(causal=True, window=0, prefix_len=10),
+    dict(causal=False, window=0, prefix_len=0),
+])
+def test_sdpa_vs_naive(kwargs):
+    q, k, v = _qkv(s=24)
+    pos = jnp.arange(24, dtype=jnp.int32)
+    got = np.asarray(_sdpa(q, k, v, pos, pos, **kwargs))
+    want = _naive_attention(q, k, v, **kwargs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_sdpa_matches_einsum_sdpa():
+    q, k, v = _qkv(s=300)
+    pos = jnp.arange(300, dtype=jnp.int32)
+    for kwargs in [dict(causal=True, window=0, prefix_len=0),
+                   dict(causal=True, window=64, prefix_len=0)]:
+        a = _sdpa(q, k, v, pos, pos, **kwargs)
+        b = _sdpa_blocked(q, k, v, pos, pos, q_chunk=128, kv_chunk=96, **kwargs)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=2e-5)
+
+
+def test_gqa_equals_mha_with_repeated_kv():
+    """GQA(kv=2) == MHA(kv=4) when KV heads are materially repeated."""
+    cfg2 = ModelConfig(name="g", arch_type="dense", num_layers=1, d_model=64,
+                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=16,
+                       dtype="float32")
+    cfg4 = ModelConfig(name="m", arch_type="dense", num_layers=1, d_model=64,
+                       num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=16,
+                       dtype="float32")
+    p2 = init_attention(KEY, cfg2)
+    hd = 16
+    # repeat each kv head twice in the MHA weights
+    def rep(w):
+        w4 = w.reshape(64, 2, hd)
+        return jnp.repeat(w4, 2, axis=1).reshape(64, 4 * hd)
+    p4 = {"wq": p2["wq"], "wo": p2["wo"],
+          "wk": {"w": rep(p2["wk"]["w"])}, "wv": {"w": rep(p2["wv"]["w"])}}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    y2, _ = attention(p2, x, cfg2)
+    y4, _ = attention(p4, x, cfg4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y4), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ring_cache_long_decode():
+    """64 decode steps against a 16-slot ring == full forward."""
+    cfg = ModelConfig(name="w", arch_type="dense", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=16,
+                      window=16, dtype="float32")
+    p = init_attention(KEY, cfg)
+    S = 80
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, S, 32))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    full, _ = attention(p, x, cfg, positions=pos, causal=True, window=16)
+    cache = init_cache(cfg, 1, 16, jnp.float32)
+    outs = []
+    for i in range(S):
+        y, cache = attention(p, x[:, i:i+1], cfg,
+                             positions=jnp.array([i], jnp.int32), causal=True,
+                             window=16, cache=cache, update_cache=True)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba
+# ---------------------------------------------------------------------------
+
+def _mamba_cfg():
+    return ModelConfig(name="m", arch_type="ssm", num_layers=1, d_model=32,
+                       vocab_size=16, ssm_state=8, dtype="float32")
+
+
+def test_mamba_chunked_scan_vs_stepwise():
+    """Full-sequence chunked scan == token-by-token recurrence."""
+    cfg = _mamba_cfg()
+    p = init_mamba(KEY, cfg)
+    S = 77   # ragged vs chunk 64
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, S, 32)) * 0.3
+    y_full, cache_full = mamba_block(p, x, cfg)
+    cache = init_mamba_cache(cfg, 2)
+    outs = []
+    for i in range(S):
+        y, cache = mamba_decode_step(p, x[:, i:i+1], cfg, cache)
+        outs.append(y)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cache.h), np.asarray(cache_full.h),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_state_carry_across_calls():
+    """block(x₁∥x₂) == block(x₁) then block(x₂ | state)."""
+    cfg = _mamba_cfg()
+    p = init_mamba(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 128, 32)) * 0.3
+    y_all, _ = mamba_block(p, x, cfg)
+    y1, c1 = mamba_block(p, x[:, :64], cfg)
+    y2, _ = mamba_block(p, x[:, 64:], cfg, h0=c1.h, conv_hist=c1.conv)
+    got = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_all), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe
+# ---------------------------------------------------------------------------
+
+def test_moe_single_expert_equals_dense_ffn():
+    """E=1, k=1, dropless → MoE ≡ plain SwiGLU FFN with expert-0 weights."""
+    cfg = ModelConfig(name="m1", arch_type="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=16,
+                      num_experts=1, experts_per_token=1, dtype="float32")
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 32))
+    y_moe, aux = moe_ffn(p, x, cfg, dropless=True)
+    dense_p = {"w_gate": {"w": p["w_gate"][0]}, "w_up": {"w": p["w_up"][0]},
+               "w_down": {"w": p["w_down"][0]}}
+    y_dense = ffn(dense_p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_moe), np.asarray(y_dense),
+                               rtol=1e-5, atol=1e-5)
+    assert float(aux["moe_dropped_frac"]) == 0.0
+
+
+def test_moe_dropless_no_drops_and_topk_weighting():
+    cfg = ModelConfig(name="m4", arch_type="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=16, vocab_size=16,
+                      num_experts=4, experts_per_token=2, dtype="float32")
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 16, 32))
+    y, aux = moe_ffn(p, x, cfg, dropless=True)
+    assert float(aux["moe_dropped_frac"]) == 0.0
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux["moe_aux_loss"]) > 0
+
+
+def test_moe_capacity_drops_monotone():
+    """Lower capacity factor ⇒ more dropped tokens (never negative)."""
+    import dataclasses
+    base = ModelConfig(name="mc", arch_type="moe", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=1, d_ff=16, vocab_size=16,
+                       num_experts=4, experts_per_token=2, dtype="float32",
+                       capacity_factor=2.0)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 32, 32))
+    drops = []
+    for cf in (2.0, 1.0, 0.5):
+        cfg = dataclasses.replace(base, capacity_factor=cf)
+        p = init_moe(KEY, cfg)
+        _, aux = moe_ffn(p, x, cfg)
+        drops.append(float(aux["moe_dropped_frac"]))
+    assert drops[0] <= drops[1] <= drops[2]
+    assert all(0.0 <= d <= 1.0 for d in drops)

@@ -1,0 +1,74 @@
+"""Flash-attention Pallas kernel vs the einsum oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_call
+from repro.models.attention import _sdpa
+
+
+def _qkv(b, s, t, h, kh, hd, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, kh, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, kh, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, S, H, KH, hd, q_block, kv_block)
+    (1, 256, 4, 2, 64, 128, 128),
+    (2, 256, 4, 1, 128, 64, 128),     # MQA
+    (1, 512, 6, 6, 32, 256, 256),     # MHA, odd head count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_sdpa_causal(shape, dtype):
+    b, s, h, kh, hd, qb, kvb = shape
+    q, k, v = _qkv(b, s, s, h, kh, hd, dtype)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    got = flash_attention_call(q, k, v, pos, pos, causal=True,
+                               q_block=qb, kv_block=kvb)
+    want = _sdpa(q, k, v, pos, pos, causal=True, window=0, prefix_len=0)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-3, atol=atol)
+
+
+def test_flash_sliding_window():
+    q, k, v = _qkv(1, 256, 256, 4, 2, 64, jnp.float32)
+    pos = jnp.arange(256, dtype=jnp.int32)
+    got = flash_attention_call(q, k, v, pos, pos, causal=True, window=64,
+                               q_block=128, kv_block=128)
+    want = _sdpa(q, k, v, pos, pos, causal=True, window=64, prefix_len=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=2e-5)
+
+
+def test_flash_masked_empty_slots():
+    """kpos = −1 (empty ring slots) contribute nothing."""
+    q, k, v = _qkv(1, 128, 128, 2, 2, 64, jnp.float32)
+    pos = jnp.arange(128, dtype=jnp.int32)
+    kpos = pos.at[64:].set(-1)            # second half of keys empty
+    got = flash_attention_call(q, k, v, pos, kpos, causal=True,
+                               q_block=128, kv_block=64)
+    want = _sdpa(q, k, v, pos, kpos, causal=True, window=0, prefix_len=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=2e-5)
+
+
+def test_flash_decode_one_query_block():
+    """Decode-style: 1 real query row (padded block), long key stream."""
+    b, t, h, kh, hd = 2, 512, 4, 2, 64
+    q, k, v = _qkv(b, 128, t, h, kh, hd, jnp.float32, seed=3)
+    qpos = jnp.full((128,), -1, jnp.int32).at[0].set(t - 1)
+    # only row 0 is a real query; rest are padding whose output we ignore
+    qpos = qpos.at[0].set(t - 1)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    got = flash_attention_call(q, k, v, qpos, kpos, causal=True,
+                               q_block=128, kv_block=128)
+    want = _sdpa(q[:, :1], k, v, qpos[:1], kpos, causal=True, window=0,
+                 prefix_len=0)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want[:, 0]),
+                               rtol=1e-3, atol=2e-5)

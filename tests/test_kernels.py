@@ -1,0 +1,111 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run in TPU interpret mode (`pltpu.InterpretParams`) — the kernel
+body executes in Python on CPU with the same SplitMix32 chain the
+oracles use, so agreement is exact up to float reduction order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.prng import Distribution
+from repro.kernels import ops, ref
+
+SHAPES = [(128, 512), (300, 700), (1000,), (3, 5, 130), (17,), ()]
+DTYPES = [jnp.float32, jnp.bfloat16]
+DISTS = [Distribution.RADEMACHER, Distribution.GAUSSIAN]
+
+
+def _tree(shape, dtype, seed=0):
+    rng = np.random.RandomState(seed)
+    arr = rng.randn(*shape) if shape else rng.randn()
+    return {"x": jnp.asarray(np.asarray(arr), dtype)}
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("dist", DISTS)
+def test_projection_kernel_vs_ref(shape, dtype, dist):
+    tree = _tree(shape, dtype)
+    rk = np.asarray(ops.project_tree_kernel(tree, 42, dist))
+    rr = np.asarray(ref.project_tree_ref(tree, 42, dist))
+    # |r| ~ sqrt(d)·σ; reduction-order noise ~ d·eps·max — scale atol by d
+    d = max(int(np.prod(shape)) if shape else 1, 1)
+    eps = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(rk, rr, rtol=1e-3, atol=10 * d * eps)
+
+
+@pytest.mark.parametrize("shape", [(128, 512), (300, 700), (1000,), (3, 5, 130)])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("dist", DISTS)
+def test_reconstruct_kernel_vs_ref(shape, dtype, dist):
+    tree = _tree(shape, dtype, seed=1)
+    n = 4
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 7
+    rs = jnp.asarray(np.random.RandomState(2).randn(n), jnp.float32)
+    upd_k = ops.server_update_kernel(tree, rs, seeds, 0.5, dist)
+    upd_r = ref.server_update_ref(tree, rs, seeds, 0.5, dist)
+    a, b = np.asarray(upd_k["x"], np.float32), np.asarray(upd_r["x"], np.float32)
+    atol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=atol)
+
+
+@pytest.mark.parametrize("shape", [(128, 512), (300, 700), (1000,)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qsgd_kernel_vs_ref(shape, bits):
+    tree = _tree(shape, jnp.float32, seed=3)
+    qk = ops.qsgd_roundtrip_kernel(tree, 11, bits)
+    qr = ref.qsgd_roundtrip_ref(tree, 11, bits)
+    np.testing.assert_allclose(np.asarray(qk["x"]), np.asarray(qr["x"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qsgd_kernel_unbiased():
+    """Stochastic rounding is unbiased: mean over seeds ≈ identity."""
+    x = {"x": jnp.asarray(np.random.RandomState(4).randn(64, 128), jnp.float32)}
+    acc = np.zeros((64, 128), np.float64)
+    n = 200
+    for s in range(n):
+        acc += np.asarray(ops.qsgd_roundtrip_kernel(x, s, 8)["x"])
+    est = acc / n
+    err = np.abs(est - np.asarray(x["x"])).mean()
+    assert err < 0.02, err
+
+
+def test_kernel_multi_leaf_tree():
+    tree = {
+        "a": jnp.asarray(np.random.RandomState(5).randn(300, 700), jnp.float32),
+        "b": jnp.asarray(np.random.RandomState(6).randn(1000), jnp.float32),
+        "c": jnp.asarray(np.random.RandomState(7).randn(3, 5, 130), jnp.float32),
+    }
+    rk = np.asarray(ops.project_tree_kernel(tree, 9))
+    rr = np.asarray(ref.project_tree_ref(tree, 9))
+    np.testing.assert_allclose(rk, rr, rtol=1e-4, atol=0.05)
+
+    seeds = jnp.arange(3, dtype=jnp.uint32)
+    rs = jnp.ones((3,), jnp.float32)
+    upd_k = ops.server_update_kernel(tree, rs, seeds)
+    upd_r = ref.server_update_ref(tree, rs, seeds)
+    for a, b in zip(jax.tree_util.tree_leaves(upd_k),
+                    jax.tree_util.tree_leaves(upd_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_projection_kernel_shard_offsets():
+    """Row/col offsets let shards project slices: Σ shard-projections ==
+    whole-array projection (the shard_map composition contract)."""
+    x = jnp.asarray(np.random.RandomState(8).randn(256, 1024), jnp.float32)
+    from repro.kernels.seeded_projection import projection_kernel_call
+    from repro.core.projection import _proj_seed
+    sj = _proj_seed(3, 0)
+    whole = projection_kernel_call(x, sj, 0, "rademacher", (128, 512))
+    parts = 0.0
+    for r0 in (0, 128):
+        for c0 in (0, 512):
+            blk = x[r0:r0+128, c0:c0+512]
+            parts += projection_kernel_call(blk, sj, 0, "rademacher", (128, 512),
+                                            row_offset=r0, col_offset=c0)
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(parts),
+                               rtol=1e-4, atol=0.05)

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (reduced variants) + serving invariants.
+
+Spec requirement (f): every assigned architecture instantiates a reduced
+family member (≤2 scanned layers... jamba keeps one full period, ≤512
+width, ≤4 experts), runs one forward/train step on CPU, and asserts
+output shapes + no NaNs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch, get_config
+from repro.models.config import ModelConfig
+from repro.models.lm import init_lm, lm_decode, lm_forward, lm_prefill
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B=2, S=32):
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = jnp.ones((B, cfg.num_frontend_tokens, cfg.d_model),
+                                   cfg.jnp_dtype)
+    if cfg.frontend == "audio":
+        batch["embeds"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                   cfg.jnp_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(name):
+    """Reduced variant: loss + one SGD step, asserts shapes and no NaNs."""
+    arch = get_arch(name, reduced=True)
+    cfg = arch.cfg
+    assert cfg.d_model <= 512 and (not cfg.num_experts or cfg.num_experts <= 4)
+    params = arch.init(KEY)
+    batch = _batch_for(cfg)
+
+    loss, grads = jax.value_and_grad(lambda p: arch.loss(p, batch))(params)
+    assert jnp.isfinite(loss), name
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
+        assert bool(jnp.all(jnp.isfinite(g))), (name, path)
+    # one SGD step changes the loss
+    stepped = jax.tree_util.tree_map(lambda w, g: w - 0.1 * g.astype(w.dtype),
+                                     params, grads)
+    loss2 = arch.loss(stepped, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_arch_smoke_serve(name):
+    """prefill + decode: logits (B,1,V), finite, cache shapes consistent."""
+    arch = get_arch(name, reduced=True)
+    cfg = arch.cfg
+    B, S = 2, 32
+    batch = {k: v for k, v in _batch_for(cfg, B, S).items() if k != "labels"}
+    logits, caches = arch.prefill(params=arch.init(KEY), batch=batch,
+                                  capacity=S + 8)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    tok = jnp.ones((B, 1), jnp.int32)
+    lg, caches = arch.decode(arch.init(KEY), tok, caches, jnp.int32(S))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_input_specs_cover_all_shapes(name):
+    arch = get_arch(name)
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        specs = arch.input_specs(shape)
+        leaves = jax.tree_util.tree_leaves(specs)
+        assert leaves, (name, shape)
+        for l in leaves:
+            assert isinstance(l, jax.ShapeDtypeStruct)
+
+
+def _consistency_cfg(kind):
+    common = dict(num_layers=2, d_model=64, vocab_size=128, dtype="float32")
+    if kind == "dense":
+        return ModelConfig(name="t", arch_type="dense", num_heads=4,
+                           num_kv_heads=2, d_ff=128, **common)
+    if kind == "window":
+        return ModelConfig(name="t", arch_type="dense", num_heads=4,
+                           num_kv_heads=2, d_ff=128, window=16, **common)
+    if kind == "ssm":
+        return ModelConfig(name="t", arch_type="ssm", ssm_state=8, **common)
+    if kind == "hybrid":
+        return ModelConfig(name="t", arch_type="hybrid", num_heads=4,
+                           num_kv_heads=2, d_ff=128, num_experts=4,
+                           experts_per_token=2, attn_period=8, attn_offset=4,
+                           moe_period=2, ssm_state=8, capacity_factor=8.0,
+                           num_layers=8, d_model=64, vocab_size=128,
+                           dtype="float32")
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", ["dense", "window", "ssm", "hybrid"])
+def test_decode_matches_forward(kind):
+    """The serving invariant: prefill+decode logits == training forward."""
+    cfg = _consistency_cfg(kind)
+    p = init_lm(cfg, KEY)
+    S = 48
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, S + 3), 0,
+                                cfg.vocab_size)
+    full = lm_forward(p, cfg, tokens=tokens)
+    cap = cfg.window if cfg.window else S + 4
+    lp, caches = lm_prefill(p, cfg, tokens=tokens[:, :S], capacity=cap)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(full[:, S - 1]),
+                               rtol=1e-4, atol=1e-4)
+    for i in range(3):
+        lg, caches = lm_decode(p, cfg, tokens[:, S + i:S + i + 1], caches,
+                               jnp.int32(S + i))
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, S + i]),
+                                   rtol=1e-4, atol=2e-4)
+
+
+def test_reduced_configs_keep_family_traits():
+    for name in ARCH_IDS:
+        full, red = get_config(name), get_config(name).reduced()
+        assert red.arch_type == full.arch_type
+        assert bool(red.num_experts) == bool(full.num_experts)
+        assert bool(red.attn_period) == bool(full.attn_period)
+        assert bool(red.encoder_layers) == bool(full.encoder_layers)
+        assert red.frontend == full.frontend

@@ -1,0 +1,96 @@
+"""Beyond-paper variants through the full simulation + extra invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qsgd as q
+from repro.data import load_digits, make_client_datasets, train_test_split_arrays
+from repro.fed import METHODS, SimulationConfig, run_simulation
+from repro.models.mlp_classifier import init_mlp
+
+
+@pytest.fixture(scope="module")
+def digits_setup():
+    x, y = load_digits(n_samples=400)
+    xtr, ytr, xte, yte = train_test_split_arrays(x, y)
+    return make_client_datasets(xtr, ytr, 8), xte, yte
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_every_method_runs_and_is_finite(digits_setup, method):
+    clients, xte, yte = digits_setup
+    h = run_simulation(
+        SimulationConfig(method=method, rounds=15, num_clients=8),
+        init_mlp(), clients, xte, yte)
+    assert np.isfinite(h["loss"]).all(), method
+    assert np.isfinite(h["accuracy"]).all(), method
+    # dimension-free methods upload O(1); baselines upload O(d)
+    if method.startswith("fedscalar") and method != "fedscalar_m8" \
+            and method != "fedscalar_block8":
+        assert h["bits_per_client_per_round"] == 64
+    if method in ("fedscalar_m8", "fedscalar_block8"):
+        assert h["bits_per_client_per_round"] == 9 * 32
+    if method == "fedavg":
+        assert h["bits_per_client_per_round"] == 1990 * 32
+
+
+def test_qsgd_quantizer_unbiased_and_bounded():
+    x = jnp.asarray(np.random.RandomState(0).randn(512), jnp.float32)
+    levels = 127
+    acc = np.zeros(512)
+    n = 300
+    for s in range(n):
+        acc += np.asarray(q.quantize_leaf(x, jax.random.PRNGKey(s), levels))
+    est = acc / n
+    # unbiased: E[Q(x)] = x
+    assert np.abs(est - np.asarray(x)).mean() < 0.02
+    # bounded quantization error per element: ≤ ‖x‖/levels
+    one = np.asarray(q.quantize_leaf(x, jax.random.PRNGKey(0), levels))
+    assert np.abs(one - np.asarray(x)).max() <= float(jnp.linalg.norm(x)) / levels + 1e-5
+
+
+def test_dirichlet_alpha_controls_skew():
+    from repro.data import partition_dirichlet
+    labels = np.random.RandomState(0).randint(0, 10, size=2000)
+
+    def skew(alpha):
+        parts = partition_dirichlet(labels, 10, alpha=alpha, seed=1)
+        # mean per-client label entropy (lower = more skewed)
+        ents = []
+        for p in parts:
+            if len(p) == 0:
+                continue
+            c = np.bincount(labels[p], minlength=10) / len(p)
+            c = c[c > 0]
+            ents.append(-(c * np.log(c)).sum())
+        return np.mean(ents)
+
+    assert skew(0.1) < skew(10.0)
+
+
+def test_seeded_generation_scales_to_large_leaf():
+    """The (row, col) scheme handles leaves beyond 2**32 elements —
+    structurally (eval_shape only; no allocation)."""
+    from repro.core.prng import Distribution, random_for_shape
+
+    big = (94, 128, 2048, 1536)  # 3.8e10 elements (235B stacked experts)
+    out = jax.eval_shape(
+        lambda: random_for_shape(big, 1, 2, Distribution.RADEMACHER))
+    assert out.shape == big
+    # and leading-dim extent stays within uint32 (the scheme's contract)
+    lead = 94 * 128 * 2048
+    assert lead < 2**32
+
+
+def test_flash_kernel_gqa_group_fold_roundtrip():
+    """The (B,S,H,hd)→(B·K, S·G, hd) fold used by the flash kernel is a
+    bijection (no head mixing)."""
+    b, s, h, kh, hd = 2, 8, 6, 2, 4
+    g = h // kh
+    x = jnp.arange(b * s * h * hd, dtype=jnp.float32).reshape(b, s, h, hd)
+    folded = (x.reshape(b, s, kh, g, hd).transpose(0, 2, 1, 3, 4)
+              .reshape(b * kh, s * g, hd))
+    back = (folded.reshape(b, kh, s, g, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(b, s, h, hd))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
