@@ -156,6 +156,50 @@ def bench_kernels():
 
 
 # ---------------------------------------------------------------------------
+# federation runtime: server-side aggregation throughput
+# ---------------------------------------------------------------------------
+
+def bench_runtime_throughput():
+    """Server clients/second aggregated vs cohort size, fori vs Pallas.
+
+    The naive path is the jitted fori-loop ``server_aggregate``; the
+    fused path is the chunked-grid Pallas kernel (interpret mode on
+    CPU — structural comparison, not TPU timing).  Rows also land in
+    ``experiments/runtime/throughput.csv`` for benchmarks.report.
+    """
+    import os
+
+    from repro.core import fedscalar as fs
+    from repro.kernels import ops
+
+    params = {"w": jnp.asarray(np.random.RandomState(0).randn(512, 2048),
+                               jnp.float32)}
+    cfg = fs.FedScalarConfig()
+    rows = []
+    for n in (8, 64, 256, 1024):
+        seeds = fs.round_seeds(0, n)
+        rs = jnp.asarray(np.random.RandomState(1).randn(n, 1), jnp.float32)
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+
+        agg = jax.jit(lambda p, r, s, wt: fs.server_aggregate(p, r, s, cfg, wt))
+        us_f, _ = timed(lambda: agg(params, rs, seeds, w)["w"])
+        cps_f = n / (us_f / 1e6)
+        emit(f"runtime_throughput_n{n}_fori", us_f, f"{cps_f:.0f}_clients/s")
+
+        us_k, _ = timed(lambda: ops.server_update_kernel(
+            params, rs[:, 0], seeds, weights=w)["w"], repeat=1)
+        cps_k = n / (us_k / 1e6)
+        emit(f"runtime_throughput_n{n}_pallas", us_k, f"{cps_k:.0f}_clients/s")
+        rows.append((n, us_f, cps_f, us_k, cps_k))
+
+    os.makedirs("experiments/runtime", exist_ok=True)
+    with open("experiments/runtime/throughput.csv", "w") as f:
+        f.write("cohort,fori_us,fori_clients_per_s,pallas_us,pallas_clients_per_s\n")
+        for r in rows:
+            f.write(",".join(f"{v:.1f}" for v in r) + "\n")
+
+
+# ---------------------------------------------------------------------------
 # roofline / dry-run summary
 # ---------------------------------------------------------------------------
 
@@ -188,6 +232,7 @@ def main() -> None:
         bench_digits(args.rounds)
     bench_prop21()
     bench_kernels()
+    bench_runtime_throughput()
     bench_roofline()
     print(f"# {len(ROWS)} benchmark rows", flush=True)
 

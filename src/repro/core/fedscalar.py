@@ -44,6 +44,7 @@ __all__ = [
     "server_aggregate",
     "fedscalar_round",
     "round_seeds",
+    "round_seeds_for",
     "upload_bits_per_client",
 ]
 
@@ -62,20 +63,31 @@ class FedScalarConfig:
     scalar_bits: int = 32                # wire width of r and ξ
 
 
-def round_seeds(round_idx: int, num_clients: int, salt: int = 0x5EED) -> jax.Array:
-    """Deterministic per-(round, client) 32-bit seeds ξ_{k,n}.
+def round_seeds_for(round_idx, client_ids, salt: int = 0x5EED) -> jax.Array:
+    """Deterministic 32-bit seeds ξ_{k,n} for explicit client ids.
 
-    In a real deployment each client draws ξ locally and uploads it;
-    for reproducible simulation we derive it from (k, n).
+    The runtime's sampled cohorts index seeds by *population* client id,
+    so a client re-sampled in a later round draws a fresh vector while a
+    full cohort in id order reproduces :func:`round_seeds` exactly.
     """
     k = jnp.uint32(round_idx)
-    n = jnp.arange(num_clients, dtype=jnp.uint32)
+    n = jnp.asarray(client_ids, jnp.uint32)
     # splitmix-style fold; avoids collisions across rounds/clients.
     x = (k * jnp.uint32(0x9E3779B9)) ^ (n * jnp.uint32(0x85EBCA6B)) ^ jnp.uint32(salt)
     x = x ^ (x >> 16)
     x = x * jnp.uint32(0x21F0AAAD)
     x = x ^ (x >> 15)
     return x
+
+
+def round_seeds(round_idx: int, num_clients: int, salt: int = 0x5EED) -> jax.Array:
+    """Deterministic per-(round, client) 32-bit seeds ξ_{k,n}.
+
+    In a real deployment each client draws ξ locally and uploads it;
+    for reproducible simulation we derive it from (k, n).
+    """
+    return round_seeds_for(
+        round_idx, jnp.arange(num_clients, dtype=jnp.uint32), salt)
 
 
 def make_local_sgd(
@@ -143,23 +155,33 @@ def server_aggregate(
     rs: jax.Array,       # (N, num_projections)
     seeds: jax.Array,    # (N,)
     cfg: FedScalarConfig,
+    weights: jax.Array | None = None,   # (N,) aggregation weights
 ) -> Any:
     """Lines 7–13: regenerate each vₙ from ξₙ, form ĝ, update x.
 
     Uses a fori_loop accumulation so peak memory is O(d), not O(N·d)
     (v is regenerated per client, never batched).
+
+    ``weights`` (runtime partial-participation path) replaces the
+    uniform 1/N mean with ĝ = Σₙ wₙ·rₙ·vₙ — the wₙ carry the
+    inverse-probability factor that keeps ĝ unbiased under sampling.
+    ``weights=None`` keeps the paper's equal-weight mean bit-for-bit.
     """
     n = rs.shape[0]
     zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
     def body(i, acc):
+        r_i = rs[i] if weights is None else rs[i] * weights[i]
         rec = reconstruct_tree(
-            params, seeds[i], rs[i], cfg.distribution, cfg.num_projections, cfg.mode
+            params, seeds[i], r_i, cfg.distribution, cfg.num_projections, cfg.mode
         )
         return jax.tree_util.tree_map(lambda a, r_: a + r_.astype(jnp.float32), acc, rec)
 
     total = jax.lax.fori_loop(0, n, body, zeros)
-    ghat = jax.tree_util.tree_map(lambda t: t / n, total)
+    if weights is None:
+        ghat = jax.tree_util.tree_map(lambda t: t / n, total)
+    else:
+        ghat = total
     return jax.tree_util.tree_map(
         lambda p, g: (p + cfg.server_lr * g).astype(p.dtype), params, ghat
     )

@@ -1,4 +1,4 @@
-"""Federated runtime: simulation driver + bandwidth/energy cost model."""
+"""Federated layer: simulation driver, cost model, event-driven runtime."""
 from repro.fed.costmodel import ChannelConfig, CostModel, table1_upload_times
 from repro.fed.simulation import SimulationConfig, run_simulation, METHODS
 
@@ -6,3 +6,7 @@ __all__ = [
     "ChannelConfig", "CostModel", "table1_upload_times",
     "SimulationConfig", "run_simulation", "METHODS",
 ]
+
+# The event-driven runtime (repro.fed.runtime) is imported lazily by
+# callers — it pulls in the kernel stack, which this package's light
+# users (cost-model tests, Table I) don't need.

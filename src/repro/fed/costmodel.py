@@ -38,6 +38,9 @@ class ChannelConfig:
     access: str = "concurrent"         # or "tdma"
     num_clients: int = 20
     float_bits: int = 32
+    # Runtime-subsystem extensions (defaults preserve the paper model):
+    drop_prob: float = 0.0             # per-upload loss probability
+    base_latency_s: float = 0.0        # fixed per-upload access latency
 
 
 class CostModel:
@@ -67,6 +70,49 @@ class CostModel:
         # energy: every client transmits for per_client_s at P_tx
         energy = ch.num_clients * ch.p_tx_watts * per_client_s
         return float(total_bits), float(wall), float(energy)
+
+    # ---- per-client vectorized interface (federation runtime) ----
+
+    def per_client_upload_seconds(self, bits_per_client: int, n: int) -> np.ndarray:
+        """One independent lognormal channel draw per cohort member.
+
+        → ``(n,)`` upload durations in seconds (excluding ``t_other``).
+        The paper's scalar :meth:`round_cost` draws one fluctuation for
+        the whole round; the event-driven runtime needs per-upload
+        arrival times, so each client gets its own draw.
+        """
+        ch = self.ch
+        fluct = self._rng.lognormal(
+            mean=-0.5 * ch.lognormal_sigma**2, sigma=ch.lognormal_sigma, size=n)
+        return bits_per_client / (ch.bandwidth_bps * fluct) + ch.base_latency_s
+
+    def per_client_drops(self, n: int) -> np.ndarray:
+        """→ ``(n,)`` bool mask of uploads lost in the air (drop_prob)."""
+        if self.ch.drop_prob <= 0.0:
+            return np.zeros(n, dtype=bool)
+        return self._rng.random_sample(n) < self.ch.drop_prob
+
+    def cohort_round_cost(self, upload_seconds: np.ndarray,
+                          bits_per_client: int,
+                          deadline_s: float = np.inf) -> tuple[float, float, float]:
+        """Aggregate per-upload durations → (bits, wall_s, energy_J).
+
+        Concurrent access: the round's upload phase ends when the
+        slowest member finishes or the deadline cuts it off (dropped
+        and cut-off uploads still occupy the air and burn energy).
+        TDMA: dedicated slots, so (deadline-clipped) durations add.
+        """
+        n = len(upload_seconds)
+        if n == 0:
+            return 0.0, float(self.t_other), 0.0
+        tx = upload_seconds - self.ch.base_latency_s   # time actually on air
+        clipped = np.minimum(upload_seconds, deadline_s)
+        if self.ch.access == "tdma":
+            upload_s = float(np.sum(clipped))
+        else:
+            upload_s = float(np.max(clipped))
+        energy = float(self.ch.p_tx_watts * np.sum(tx))
+        return float(n * bits_per_client), self.t_other + upload_s, energy
 
 
 def table1_upload_times(

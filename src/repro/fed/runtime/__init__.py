@@ -1,0 +1,42 @@
+"""Event-driven federation runtime for massive, partial, async cohorts.
+
+The small-scale simulation (``repro.fed.simulation``) vmaps a fixed,
+fully-participating cohort through one ``lax.scan`` — faithful to the
+paper's §III but unable to express what a bandwidth-constrained
+deployment actually looks like: 10⁵–10⁶ registered clients of which a
+sampled fraction participates per round, uploads that arrive staggered
+over a lossy channel, stragglers cut by a deadline, and stale uploads
+trickling in rounds late.
+
+This package is the missing server side (DESIGN.md §5):
+
+* :mod:`sampling`  — client-population registry + per-round cohort
+  sampling (uniform / weighted / Poisson) with inverse-probability
+  reweighting so ĝ stays unbiased under partial participation,
+* :mod:`transport` — the actual wire: (r, ξ) serialized to bytes at a
+  configurable scalar width, a downlink broadcast channel, and
+  loss/latency driven by :class:`repro.fed.costmodel.ChannelConfig`,
+* :mod:`server`    — a streaming aggregator with O(1) state per client,
+  deadline-based round close and staleness-weighted async aggregation,
+* :mod:`engine`    — the round driver: batches cohort members through
+  the ``fedscalar_round`` building blocks and routes large cohorts
+  through the fused Pallas reconstruction kernel.
+"""
+from repro.fed.runtime.engine import RuntimeConfig, run_federation
+from repro.fed.runtime.sampling import ClientPopulation, Cohort, CohortSampler
+from repro.fed.runtime.server import ServerConfig, StreamingAggregator, Upload
+from repro.fed.runtime.transport import (
+    WireFormat,
+    DownlinkBroadcast,
+    UplinkChannel,
+    decode_upload,
+    encode_upload,
+)
+
+__all__ = [
+    "RuntimeConfig", "run_federation",
+    "ClientPopulation", "Cohort", "CohortSampler",
+    "ServerConfig", "StreamingAggregator", "Upload",
+    "WireFormat", "UplinkChannel", "DownlinkBroadcast",
+    "encode_upload", "decode_upload",
+]

@@ -1,0 +1,365 @@
+"""Round driver: K server rounds over populations up to ~10⁵ clients.
+
+Per round the engine
+
+  1. samples a cohort from the population registry (``sampling``),
+  2. broadcasts the global model (downlink accounting),
+  3. runs every cohort member's S local-SGD steps **in fixed-size
+     vmapped chunks** through the same ``make_local_sgd``/
+     ``client_stage`` building blocks the paper-scale simulation uses
+     (fixed chunk shape → one XLA compilation for any cohort size),
+  4. pushes each (r, ξ) upload through the byte-level wire codec and
+     the lossy/laggy channel (``transport``),
+  5. lets the streaming aggregator close the round at the deadline
+     (``server``) and applies  x ← x + lr·Σ coeffᵢ·rᵢ·v(ξᵢ)  — via the
+     fori-loop path or, for large cohorts, the fused Pallas
+     reconstruction kernel with its client-chunk grid dimension,
+  6. charges the round to the bandwidth/energy cost model.
+
+Fast path: a fully-participating, synchronous, lossless, fp32
+configuration is *exactly* the paper's §III experiment, so the engine
+delegates it to ``run_simulation``'s single fused ``lax.scan`` — the
+trajectory is bit-for-bit identical to the small-scale path while the
+runtime keeps its own cost accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedscalar as fs
+from repro.core.prng import Distribution
+from repro.core.projection import tree_size
+from repro.fed.costmodel import ChannelConfig, CostModel
+from repro.fed.runtime.sampling import (
+    ClientPopulation,
+    CohortSampler,
+    sampling_diagnostic,
+)
+from repro.fed.runtime.server import ServerConfig, StreamingAggregator, Upload
+from repro.fed.runtime.transport import DownlinkBroadcast, UplinkChannel, WireFormat
+
+__all__ = ["RuntimeConfig", "run_federation"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Everything the federation runtime needs for one K-round run."""
+
+    rounds: int = 50                    # K
+    population: int = 1000              # registered clients
+    participation: float = 0.01         # expected sampled fraction per round
+    sampler: str = "uniform"            # uniform | weighted | poisson
+    local_steps: int = 5                # S
+    batch_size: int = 32
+    local_lr: float = 3e-3              # α
+    server_lr: float = 1.0
+    distribution: Distribution = Distribution.RADEMACHER
+    num_projections: int = 1            # m
+    seed: int = 0
+    scalar_format: str = "fp32"         # wire width of r (fp32 | fp16 | bf16)
+    eval_every: int = 1
+    client_chunk: int = 256             # cohort members per vmapped compute chunk
+    kernel_cohort_threshold: int | None = None  # cohorts ≥ this → Pallas path
+                                                # (None: TPU only, CPU never)
+    server: ServerConfig = dataclasses.field(default_factory=ServerConfig)
+    channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+
+    def protocol(self) -> fs.FedScalarConfig:
+        return fs.FedScalarConfig(
+            local_steps=self.local_steps, local_lr=self.local_lr,
+            server_lr=self.server_lr, distribution=self.distribution,
+            num_projections=self.num_projections)
+
+    def wire(self) -> WireFormat:
+        return WireFormat(scalar=self.scalar_format,
+                          num_projections=self.num_projections)
+
+    def cohort_size(self) -> int:
+        return max(1, int(round(self.participation * self.population)))
+
+
+def _is_fused_equivalent(cfg: RuntimeConfig, num_shards: int) -> bool:
+    """True iff the config degenerates to the paper-scale simulation."""
+    return (
+        cfg.participation == 1.0
+        and cfg.sampler in ("uniform", "weighted")
+        and cfg.population == num_shards
+        and not math.isfinite(cfg.server.deadline_s)   # deadline = ∞
+        and cfg.server.max_staleness == 0
+        and cfg.channel.drop_prob == 0.0
+        and cfg.channel.base_latency_s == 0.0
+        and cfg.scalar_format == "fp32"
+        and cfg.num_projections == 1
+        and cfg.server_lr == 1.0
+        and cfg.distribution in (Distribution.RADEMACHER, Distribution.GAUSSIAN)
+    )
+
+
+def _pad_pow2(n: int, lo: int = 16) -> int:
+    """Bucket size for round-close buffers: bounded recompilation."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def run_federation(
+    cfg: RuntimeConfig,
+    init_params: Any,
+    client_sets,
+    x_test: np.ndarray,
+    y_test: np.ndarray,
+    grad_fn: Callable | None = None,
+    eval_fns: tuple[Callable, Callable] | None = None,
+    client_weights: np.ndarray | None = None,
+) -> dict:
+    """Run K federation rounds → history dict of numpy arrays.
+
+    ``client_sets`` are the data shards; a population larger than the
+    shard list maps client n onto shard n mod #shards (virtual
+    clients).  ``grad_fn``/``eval_fns`` default to the paper's digits
+    MLP and exist so tests can drive tiny custom models.
+    ``client_weights`` (N,) are the ``weighted`` sampler's relative
+    sampling weights; default: each virtual client's shard size.
+    """
+    from repro.fed.simulation import _stack_clients
+
+    if grad_fn is None:
+        from repro.models.mlp_classifier import mlp_grad
+        grad_fn = mlp_grad
+    if eval_fns is None:
+        from repro.models.mlp_classifier import mlp_accuracy, mlp_loss
+        eval_fns = (mlp_loss, mlp_accuracy)
+    loss_fn, acc_fn = eval_fns
+
+    num_shards = len(client_sets)
+    pcfg = cfg.protocol()
+    fmt = cfg.wire()
+    d = tree_size(init_params)
+
+    if _is_fused_equivalent(cfg, num_shards):
+        return _run_fused(cfg, init_params, client_sets, x_test, y_test, fmt, d)
+
+    cx, cy = _stack_clients(client_sets)          # (#shards, n_per, feat...)
+    n_per = cx.shape[1]
+    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+    S, B = cfg.local_steps, cfg.batch_size
+
+    if client_weights is None and cfg.sampler == "weighted":
+        # default PPS weights: the shard size behind each virtual client
+        shard_sizes = np.asarray([len(y) for _, y in client_sets], np.float64)
+        client_weights = shard_sizes[np.arange(cfg.population) % num_shards]
+    population = ClientPopulation(cfg.population, weights=client_weights)
+    sampler = CohortSampler(population, cfg.participation, cfg.sampler,
+                            seed=cfg.seed)
+    cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
+                   rng_seed=cfg.seed)
+    uplink = UplinkChannel(cm, fmt)
+    downlink = DownlinkBroadcast(d, cfg.channel.float_bits)
+    agg = StreamingAggregator(cfg.server)
+
+    local = fs.make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
+
+    # ---- jitted fixed-shape chunk: C_chunk clients' local rounds → rs ----
+    @jax.jit
+    def chunk_rs(params, round_idx, client_ids):
+        shard = (client_ids % num_shards).astype(jnp.int32)
+        sx = cx[shard]                            # (chunk, n_per, feat)
+        sy = cy[shard]
+        # per-(round, client) minibatch streams — independent of cohort makeup
+        def draw(cid):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(cfg.seed), round_idx), cid)
+            return jax.random.randint(key, (S, B), 0, n_per)
+        idx = jax.vmap(draw)(client_ids)          # (chunk, S, B)
+        chunk = client_ids.shape[0]
+        bx = jnp.take_along_axis(
+            sx[:, :, None, :], idx.reshape(chunk, S * B, 1, 1), axis=1
+        ).reshape((chunk, S, B) + sx.shape[2:])
+        by = jnp.take_along_axis(
+            sy, idx.reshape(chunk, S * B), axis=1).reshape(chunk, S, B)
+        seeds = fs.round_seeds_for(round_idx, client_ids)
+        deltas = jax.vmap(local, in_axes=(None, 0))(params, (bx, by))
+        rs, _ = jax.vmap(lambda dl, sd: fs.client_stage(dl, sd, pcfg))(deltas, seeds)
+        return rs, seeds
+
+    # ---- jitted weighted server updates (bucketed shapes) ----
+    @jax.jit
+    def apply_fori(params, rs, seeds, weights):
+        return fs.server_aggregate(params, rs, seeds, pcfg, weights=weights)
+
+    @jax.jit
+    def apply_kernel(params, rs, seeds, weights):
+        from repro.kernels import ops
+        return ops.server_update_kernel(
+            params, rs[:, 0] if rs.ndim == 2 else rs, seeds,
+            server_lr=cfg.server_lr, distribution=cfg.distribution,
+            weights=weights)
+
+    kern_thresh = cfg.kernel_cohort_threshold
+    if kern_thresh is None:
+        kern_thresh = 512 if jax.default_backend() == "tpu" else None
+
+    @jax.jit
+    def evaluate(params):
+        return loss_fn(params, (xt, yt)), acc_fn(params, xt, yt)
+
+    params = init_params
+    K = cfg.rounds
+    hist = {k: np.zeros(K) for k in (
+        "loss", "accuracy", "cum_bits", "cum_downlink_bits", "cum_wall_s",
+        "cum_energy_j", "cohort_size", "applied", "applied_stale",
+        "lost_channel", "dropped_deadline", "dropped_stale", "weight_sum")}
+    hist["loss"][:] = np.nan
+    hist["accuracy"][:] = np.nan
+    deadline = cfg.server.deadline_s
+    t0 = time.time()
+
+    for k in range(K):
+        cohort = sampler.sample(k)
+        downlink_bits = downlink.broadcast()
+
+        # --- client compute, fixed-shape chunks (pad by repeating id 0) ---
+        ids = cohort.client_ids
+        c = len(ids)
+        rs_np = np.zeros((max(c, 1), cfg.num_projections), np.float32)
+        seeds_np = np.zeros(max(c, 1), np.uint32)
+        chunk = cfg.client_chunk
+        for lo in range(0, c, chunk):
+            part = ids[lo:lo + chunk]
+            padded = np.zeros(chunk, np.int64) if len(part) < chunk else part
+            if len(part) < chunk:
+                padded[:len(part)] = part
+            rs_c, seeds_c = chunk_rs(params, jnp.uint32(k),
+                                     jnp.asarray(padded, jnp.uint32))
+            rs_np[lo:lo + len(part)] = np.asarray(rs_c)[:len(part)]
+            seeds_np[lo:lo + len(part)] = np.asarray(seeds_c)[:len(part)]
+
+        # --- uplink: bytes on the (lossy, laggy) air ---
+        tx = uplink.transmit(rs_np[:c], seeds_np[:c]) if c else None
+        for i in range(c):
+            agg.offer(Upload(
+                client_id=int(ids[i]), encoded_round=k, seed=int(tx.seeds[i]),
+                r=tx.r_hat[i], agg_weight=float(cohort.agg_weights[i]),
+                latency_s=float(tx.latency_s[i]), lost=bool(tx.lost[i])))
+
+        # --- round close + model update ---
+        aseeds, acoeffs, ars, st = agg.close_round(k)
+        a = len(aseeds)
+        if a and not st.skipped:
+            bucket = _pad_pow2(a)
+            seeds_b = np.zeros(bucket, np.uint32)
+            seeds_b[:a] = aseeds
+            rs_b = np.zeros((bucket, ars.shape[1]), np.float32)
+            rs_b[:a] = ars
+            w_b = np.zeros(bucket, np.float32)
+            w_b[:a] = acoeffs.astype(np.float32)
+            use_kernel = (kern_thresh is not None and a >= kern_thresh
+                          and cfg.num_projections == 1)
+            applier = apply_kernel if use_kernel else apply_fori
+            params = applier(params, jnp.asarray(rs_b), jnp.asarray(seeds_b),
+                             jnp.asarray(w_b))
+
+        # --- cost accounting ---
+        # Sync mode: the round lasts until the deadline cuts the slowest
+        # upload.  Async mode: rounds tick on the fixed cadence the
+        # staleness model is defined over (stragglers' air time is still
+        # billed as energy, their lateness as τ — not as this round's wall).
+        async_mode = (cfg.server.max_staleness > 0
+                      and math.isfinite(cfg.server.round_period_s))
+        if c:
+            bits, wall, energy = cm.cohort_round_cost(
+                tx.latency_s, fmt.bits_per_upload, deadline_s=deadline)
+        else:
+            bits, energy, wall = 0.0, 0.0, cm.t_other
+        if async_mode:
+            wall = cfg.server.round_period_s
+
+        hist["cohort_size"][k] = c
+        hist["applied"][k] = st.applied
+        hist["applied_stale"][k] = st.applied_stale
+        hist["lost_channel"][k] = st.lost_channel
+        hist["dropped_deadline"][k] = st.dropped_deadline
+        hist["dropped_stale"][k] = st.dropped_stale
+        hist["weight_sum"][k] = st.weight_sum
+        hist["cum_bits"][k] = bits
+        hist["cum_downlink_bits"][k] = downlink_bits
+        hist["cum_wall_s"][k] = wall
+        hist["cum_energy_j"][k] = energy
+        if k % cfg.eval_every == 0 or k == K - 1:
+            loss, acc = evaluate(params)
+            hist["loss"][k] = float(loss)
+            hist["accuracy"][k] = float(acc)
+
+    for key in ("cum_bits", "cum_downlink_bits", "cum_wall_s", "cum_energy_j"):
+        hist[key] = np.cumsum(hist[key])
+
+    return dict(
+        method=f"runtime_{cfg.sampler}",
+        round=np.arange(1, K + 1),
+        final_params=params,
+        bits_per_client_per_round=fmt.bits_per_upload,
+        sim_compute_seconds=time.time() - t0,
+        fused_path=False,
+        pending_rounds=agg.pending_rounds(),
+        sampling_diagnostic=sampling_diagnostic(sampler, rounds=min(200, 4 * K)),
+        **hist,
+    )
+
+
+def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
+               fmt: WireFormat, d: int) -> dict:
+    """Full-participation sync path → one fused ``lax.scan``.
+
+    Delegates to :func:`repro.fed.simulation.run_simulation`, so the
+    trajectory is bit-for-bit the paper-scale experiment; only the cost
+    accounting is redone with the runtime's per-upload channel draws.
+    """
+    from repro.fed.simulation import SimulationConfig, run_simulation
+
+    method = ("fedscalar_rademacher"
+              if cfg.distribution == Distribution.RADEMACHER
+              else "fedscalar_gaussian")
+    sim = SimulationConfig(
+        method=method, rounds=cfg.rounds, num_clients=cfg.population,
+        local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+        local_lr=cfg.local_lr, seed=cfg.seed, channel=cfg.channel)
+    h = run_simulation(sim, init_params, client_sets, x_test, y_test)
+
+    cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
+                   rng_seed=cfg.seed)
+    K, n = cfg.rounds, cfg.population
+    bits = np.zeros(K)
+    wall = np.zeros(K)
+    energy = np.zeros(K)
+    for k in range(K):
+        lat = cm.per_client_upload_seconds(fmt.bits_per_upload, n)
+        bits[k], wall[k], energy[k] = cm.cohort_round_cost(lat, fmt.bits_per_upload)
+
+    h.update(
+        method=f"runtime_{cfg.sampler}_fused",
+        cum_bits=np.cumsum(bits),
+        cum_downlink_bits=np.cumsum(np.full(K, float(d * cfg.channel.float_bits))),
+        cum_wall_s=np.cumsum(wall),
+        cum_energy_j=np.cumsum(energy),
+        cohort_size=np.full(K, float(n)),
+        applied=np.full(K, float(n)),
+        applied_stale=np.zeros(K),
+        lost_channel=np.zeros(K),
+        dropped_deadline=np.zeros(K),
+        dropped_stale=np.zeros(K),
+        weight_sum=np.ones(K),
+        bits_per_client_per_round=fmt.bits_per_upload,
+        fused_path=True,
+        pending_rounds=[],
+        sampling_diagnostic=dict(empirical_marginal_abs_err=0.0,
+                                 estimate_rel_err=0.0),
+    )
+    return h

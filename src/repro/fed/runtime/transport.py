@@ -1,0 +1,149 @@
+"""The wire: (r, ξ) uplink codec, lossy channel, downlink broadcast.
+
+Everything the paper abstracts as "upload two scalars" is made concrete
+here.  An uplink packet is
+
+    [ r₀ … r_{m−1} | ξ ]      m scalars at ``scalar`` width + u32 seed
+
+in little-endian byte order — 8 bytes per client per round for the
+paper's protocol (m = 1, fp32 r).  Halving the scalar to fp16/bf16
+brings it to 6 bytes; the server aggregates whatever the *decoded*
+value is, so wire quantization error flows through the estimator
+exactly as it would in deployment.
+
+The channel model rides on :class:`repro.fed.costmodel.CostModel`: one
+independent lognormal rate draw per upload gives per-upload latencies
+(this is what makes stragglers), ``ChannelConfig.drop_prob`` loses
+packets outright, and ``base_latency_s`` adds fixed access overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fed.costmodel import CostModel
+
+__all__ = [
+    "SCALAR_WIDTHS",
+    "WireFormat",
+    "encode_upload",
+    "decode_upload",
+    "UplinkChannel",
+    "TransmitResult",
+    "DownlinkBroadcast",
+]
+
+
+def _bf16_dtype():
+    import ml_dtypes  # jax hard-depends on ml_dtypes; no new requirement
+
+    return np.dtype(ml_dtypes.bfloat16)
+
+
+# name → (numpy dtype factory, bits per scalar)
+SCALAR_WIDTHS = {
+    "fp32": (lambda: np.dtype(np.float32), 32),
+    "fp16": (lambda: np.dtype(np.float16), 16),
+    "bf16": (_bf16_dtype, 16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Uplink packet layout: m projection scalars + one u32 seed."""
+
+    scalar: str = "fp32"          # width of each r scalar
+    num_projections: int = 1      # m
+
+    def __post_init__(self):
+        if self.scalar not in SCALAR_WIDTHS:
+            raise ValueError(
+                f"unknown scalar format {self.scalar!r}; want {list(SCALAR_WIDTHS)}")
+
+    @property
+    def scalar_dtype(self) -> np.dtype:
+        return SCALAR_WIDTHS[self.scalar][0]()
+
+    @property
+    def bits_per_upload(self) -> int:
+        return self.num_projections * SCALAR_WIDTHS[self.scalar][1] + 32
+
+    @property
+    def bytes_per_upload(self) -> int:
+        return self.bits_per_upload // 8
+
+
+def encode_upload(r: np.ndarray, seed: int, fmt: WireFormat) -> bytes:
+    """Serialize one client's upload → ``fmt.bytes_per_upload`` bytes."""
+    r = np.asarray(r, np.float32).reshape(-1)
+    if r.shape != (fmt.num_projections,):
+        raise ValueError(f"expected {fmt.num_projections} scalars, got {r.shape}")
+    scalars = r.astype(fmt.scalar_dtype).tobytes()
+    return scalars + np.asarray(seed, dtype="<u4").tobytes()
+
+
+def decode_upload(buf: bytes, fmt: WireFormat) -> tuple[np.ndarray, int]:
+    """→ (float32 r̂ of shape (m,), seed).  Exact inverse of the bytes:
+    ``encode_upload(*decode_upload(buf, fmt), fmt) == buf``."""
+    if len(buf) != fmt.bytes_per_upload:
+        raise ValueError(f"packet is {len(buf)} B, expected {fmt.bytes_per_upload}")
+    m = fmt.num_projections
+    body = np.frombuffer(buf, dtype=fmt.scalar_dtype, count=m, offset=0)
+    seed = int(np.frombuffer(buf, dtype="<u4", count=1,
+                             offset=m * fmt.scalar_dtype.itemsize)[0])
+    return body.astype(np.float32), seed
+
+
+@dataclasses.dataclass
+class TransmitResult:
+    """Per-upload outcome of one round's cohort uplink."""
+
+    r_hat: np.ndarray          # (C, m) float32 — decoded (wire-quantized) scalars
+    seeds: np.ndarray          # (C,) uint32 — decoded seeds
+    latency_s: np.ndarray      # (C,) arrival latency after dispatch
+    lost: np.ndarray           # (C,) bool — dropped in the air
+    payload_bytes: int         # total uplink payload offered (incl. lost)
+
+
+class UplinkChannel:
+    """Serialize and channel-simulate one cohort's uplink per round."""
+
+    def __init__(self, cost_model: CostModel, fmt: WireFormat):
+        self.cm = cost_model
+        self.fmt = fmt
+
+    def transmit(self, rs: np.ndarray, seeds: np.ndarray) -> TransmitResult:
+        """rs (C, m) float32, seeds (C,) uint32 → :class:`TransmitResult`.
+
+        Every upload really goes through bytes: the scalars the server
+        aggregates are the *decoded* ones, so fp16/bf16 wire widths are
+        honestly lossy while fp32 is byte-exact.
+        """
+        rs = np.asarray(rs, np.float32).reshape(len(seeds), -1)
+        c = len(seeds)
+        r_hat = np.empty_like(rs)
+        seeds_hat = np.empty(c, np.uint32)
+        for i in range(c):
+            packet = encode_upload(rs[i], int(seeds[i]), self.fmt)
+            r_hat[i], seeds_hat[i] = decode_upload(packet, self.fmt)
+        latency = self.cm.per_client_upload_seconds(self.fmt.bits_per_upload, c)
+        lost = self.cm.per_client_drops(c)
+        return TransmitResult(
+            r_hat=r_hat, seeds=seeds_hat, latency_s=latency, lost=lost,
+            payload_bytes=c * self.fmt.bytes_per_upload)
+
+
+class DownlinkBroadcast:
+    """Server → cohort model broadcast (one transmission, wireless)."""
+
+    def __init__(self, model_dim: int, float_bits: int = 32):
+        self.bits_per_round = model_dim * float_bits
+        self.total_bits = 0
+        self.rounds = 0
+
+    def broadcast(self) -> int:
+        """Account one round's broadcast; → bits sent this round."""
+        self.total_bits += self.bits_per_round
+        self.rounds += 1
+        return self.bits_per_round

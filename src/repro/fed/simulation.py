@@ -141,12 +141,18 @@ def run_simulation(
         ef0 = jax.tree_util.tree_map(
             lambda p: jnp.zeros((cfg.num_clients,) + p.shape, jnp.float32), init_params
         )
+
+    @jax.jit
+    def run_rounds(carry, ks):
+        return jax.lax.scan(scan_step, carry, ks)
+
+    ks = jnp.arange(cfg.rounds)
     t0 = time.time()
-    (final_params, _), (losses, accs) = jax.lax.scan(
-        jax.jit(scan_step) if False else scan_step,
-        (init_params, ef0),
-        jnp.arange(cfg.rounds),
-    )
+    compiled = run_rounds.lower((init_params, ef0), ks).compile()
+    compile_s = time.time() - t0
+    t0 = time.time()
+    (final_params, _), (losses, accs) = jax.block_until_ready(
+        compiled((init_params, ef0), ks))
     losses, accs = np.asarray(losses), np.asarray(accs)
     compute_s = time.time() - t0
 
@@ -173,5 +179,6 @@ def run_simulation(
         cum_energy_j=np.cumsum(energy),
         bits_per_client_per_round=bits_per_client,
         final_params=final_params,
+        sim_compile_seconds=compile_s,
         sim_compute_seconds=compute_s,
     )

@@ -10,9 +10,20 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 _TAG_U1 = 0x9E3779B9
 _TAG_U2 = 0x85EBCA6B
+
+
+def interpret_mode():
+    """Value for ``pallas_call(interpret=...)`` on non-TPU backends.
+
+    Newer jax wants a ``pltpu.InterpretParams`` instance (TPU-semantics
+    interpreter); jax<=0.4.x only accepts a bool.
+    """
+    params = getattr(pltpu, "InterpretParams", None)
+    return params() if params is not None else True
 
 
 def _u32(x):

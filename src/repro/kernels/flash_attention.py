@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import interpret_mode
+
 __all__ = ["flash_attention_call"]
 
 DEFAULT_Q_BLOCK = 256
@@ -111,7 +113,7 @@ def flash_attention_call(
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     if interpret:
-        interpret = pltpu.InterpretParams()
+        interpret = interpret_mode()
 
     # fold: Q → (B·K, S, G·hd-rows): arrange as (B·K, S·G, hd)
     qf = (q.reshape(b, s, kh, g, hd).transpose(0, 2, 1, 3, 4)

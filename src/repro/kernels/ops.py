@@ -85,12 +85,22 @@ def server_update_kernel(
     server_lr: float = 1.0,
     distribution: Distribution = Distribution.RADEMACHER,
     interpret: bool | None = None,
+    weights: jax.Array | None = None,   # (N,) per-client aggregation weights
 ) -> Any:
-    """Kernelized Algorithm 1 lines 7–13: x ← x + (lr/N)·Σₙ rₙ vₙ."""
+    """Kernelized Algorithm 1 lines 7–13: x ← x + (lr/N)·Σₙ rₙ vₙ.
+
+    With ``weights`` (the runtime's Horvitz–Thompson × staleness
+    coefficients) the uniform 1/N mean becomes x ← x + lr·Σₙ wₙ rₙ vₙ;
+    the weights are folded into the scalars so the kernel is unchanged.
+    """
     rs = rs.reshape(-1).astype(jnp.float32)
     n = rs.shape[0]
     sj = jax.vmap(lambda s: _proj_seed(s, 0))(seeds)
-    scale = server_lr / n
+    if weights is not None:
+        rs = rs * weights.reshape(-1).astype(jnp.float32)
+        scale = server_lr
+    else:
+        scale = server_lr / n
     leaves, treedef = jax.tree_util.tree_flatten(params)
     out = []
     for tag, leaf in enumerate(leaves):

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import fold_seed, gen_tile
+from repro.kernels.common import fold_seed, gen_tile, interpret_mode
 
 __all__ = ["projection_kernel_call", "DEFAULT_BLOCK"]
 
@@ -73,7 +73,7 @@ def projection_kernel_call(
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     if interpret:
-        interpret = pltpu.InterpretParams()
+        interpret = interpret_mode()
     seed_folded = fold_seed(seed, leaf_tag).reshape(1)
 
     kern = functools.partial(

@@ -8,13 +8,20 @@ in-register:
 
     HBM traffic:  read x (d) + write y (d)           — independent of N
     compute:      N hash-chains + FMA per element    — VPU-bound
+    cohort state: N (r, ξ) scalar pairs in SMEM      — O(1) per client
 
 which is the paper's "upload two scalars" insight transplanted to the
 memory system: reconstruction cost no longer scales with N in bytes,
 only in (cheap, hidable) integer ops.
 
-Grid: 2-D over tiles of the parameter matrix; seeds/r live in SMEM; the
-client loop is a static unroll (cohorts are small: 4–32).
+Grid: 3-D — tiles of the parameter matrix × **client chunks**.  The
+cohort axis is a real grid dimension, not a static unroll, so one
+compiled kernel serves any cohort size (the federation runtime pads the
+(r, ξ) buffers to a chunk multiple; padded slots carry r = 0 and are
+exact no-ops).  Within a chunk a ``fori_loop`` walks the SMEM scalars;
+partial sums live in a float32 VMEM accumulator that persists across
+the (sequential) chunk iterations of each tile, so low-precision param
+dtypes never see intermediate rounding.
 """
 from __future__ import annotations
 
@@ -25,43 +32,56 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import fold_seed, gen_tile
+from repro.kernels.common import fold_seed, gen_tile, interpret_mode
 
-__all__ = ["reconstruct_kernel_call"]
+__all__ = ["reconstruct_kernel_call", "CLIENT_CHUNK"]
 
 DEFAULT_BLOCK = (256, 512)
+CLIENT_CHUNK = 32     # cohort members regenerated per grid step
 
 
-def _rec_kernel(seeds_ref, rs_ref, scale_ref, x_ref, o_ref, *,
-                distribution: str, num_clients: int, block: tuple,
+def _rec_kernel(seeds_ref, rs_ref, scale_ref, x_ref, o_ref, acc_ref, *,
+                distribution: str, chunk: int, num_chunks: int, block: tuple,
                 row_offset: int, col_offset: int):
     pi = pl.program_id(0)
     pj = pl.program_id(1)
+    pc = pl.program_id(2)
     br, bc = block
     row = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 0)
            + jnp.uint32(row_offset) + pi.astype(jnp.uint32) * jnp.uint32(br))
     col = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 1)
            + jnp.uint32(col_offset) + pj.astype(jnp.uint32) * jnp.uint32(bc))
 
-    acc = jnp.zeros((br, bc), jnp.float32)
-    for n in range(num_clients):          # static unroll over the cohort
-        v = gen_tile(seeds_ref[n], row, col, distribution)
-        acc = acc + rs_ref[n] * v
-    y = x_ref[...].astype(jnp.float32) + scale_ref[0] * acc
-    o_ref[...] = y.astype(o_ref.dtype)
+    @pl.when(pc == 0)
+    def _():
+        acc_ref[...] = jnp.zeros((br, bc), jnp.float32)
+
+    base = pc * chunk
+
+    def body(i, acc):
+        v = gen_tile(seeds_ref[base + i], row, col, distribution)
+        return acc + rs_ref[base + i] * v
+
+    acc_ref[...] = jax.lax.fori_loop(0, chunk, body, acc_ref[...])
+
+    @pl.when(pc == num_chunks - 1)
+    def _():
+        y = x_ref[...].astype(jnp.float32) + scale_ref[0] * acc_ref[...]
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 def reconstruct_kernel_call(
     x2d: jax.Array,
     seeds: jax.Array,          # (N,) uint32 round seeds (unfolded)
-    rs: jax.Array,             # (N,) float32 uploaded scalars
+    rs: jax.Array,             # (N,) float32 uploaded scalars (0 = padding)
     leaf_tag: int,
-    scale,                     # server_lr / N
+    scale,                     # server_lr / N  (or 1 with pre-weighted rs)
     distribution: str = "rademacher",
     block: tuple = DEFAULT_BLOCK,
     row_offset: int = 0,
     col_offset: int = 0,
     interpret: bool | None = None,
+    client_chunk: int = CLIENT_CHUNK,
 ) -> jax.Array:
     """→ updated params tile  x + scale·Σₙ rₙ vₙ  (same shape/dtype as x2d)."""
     rows, cols = x2d.shape
@@ -71,23 +91,32 @@ def reconstruct_kernel_call(
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     if interpret:
-        interpret = pltpu.InterpretParams()
+        interpret = interpret_mode()
+    chunk = min(client_chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        # Padding slots contribute rₙ·vₙ = 0·vₙ exactly.
+        seeds = jnp.concatenate([seeds, jnp.zeros((pad,), seeds.dtype)])
+        rs = jnp.concatenate([rs.astype(jnp.float32), jnp.zeros((pad,), jnp.float32)])
+    num_chunks = (n + pad) // chunk
     seeds_folded = jax.vmap(lambda s: fold_seed(s, leaf_tag))(seeds)
     scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
 
     kern = functools.partial(
-        _rec_kernel, distribution=distribution, num_clients=n, block=block,
+        _rec_kernel, distribution=distribution, chunk=chunk,
+        num_chunks=num_chunks, block=block,
         row_offset=row_offset, col_offset=col_offset)
     return pl.pallas_call(
         kern,
-        grid=(rows // br, cols // bc),
+        grid=(rows // br, cols // bc, num_chunks),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j, c: (i, j)),
         ],
-        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((br, bc), lambda i, j, c: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rows, cols), x2d.dtype),
+        scratch_shapes=[pltpu.VMEM((br, bc), jnp.float32)],
         interpret=interpret,
     )(seeds_folded, rs.astype(jnp.float32), scale_arr, x2d)

@@ -28,6 +28,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import ambient_mesh_axes
 from repro.core.fedscalar import FedScalarConfig, round_seeds, server_aggregate
 from repro.core.prng import Distribution
 from repro.core.projection import project_tree
@@ -88,7 +89,7 @@ def make_train_step(arch, fl: FLRunConfig, window: Optional[int] = None,
             # (GB, ...) → (n_clients, S, per_step, ...); keep batch sharding
             # on the per-step dim (dims 0/1 iterate under scan).
             y = x.reshape((n, s, per_step) + x.shape[1:])
-            if jax.sharding.get_abstract_mesh().empty:
+            if ambient_mesh_axes() is None:
                 return y       # single-device (CPU tests/examples)
             spec = P(None, None, dp_axes, *([None] * (x.ndim - 1)))
             return jax.lax.with_sharding_constraint(y, spec)
@@ -161,7 +162,7 @@ def make_train_step_client_parallel(arch, fl: FLRunConfig, param_spec_tp,
         per_step = gb // n // s
         seeds = round_seeds(round_idx, n)
 
-        meshless = jax.sharding.get_abstract_mesh().empty
+        meshless = ambient_mesh_axes() is None
 
         def to_clients(x):
             y = x.reshape((n, s, per_step) + x.shape[1:])

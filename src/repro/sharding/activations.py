@@ -50,10 +50,8 @@ def batch_over_model():
 
 
 def _ambient_axes():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
-        return None
-    return dict(zip(m.axis_names, m.axis_sizes))
+    from repro.core.compat import ambient_mesh_axes
+    return ambient_mesh_axes()
 
 
 def constrain(x, *logical):

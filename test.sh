@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+#   ./test.sh              # full tier-1 suite
+#   ./test.sh tests/test_runtime.py -k sampler   # pass-through args
+#
+# XLA_FLAGS forces 8 host-platform devices so the sharding paths are
+# exercised on CPU-only machines (the sharding e2e test additionally
+# re-execs itself with its own device count).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -x -q "$@"
