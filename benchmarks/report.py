@@ -1,18 +1,37 @@
 """Assemble EXPERIMENTS.md from recorded artifacts.
 
-Reads ``experiments/dryrun/*.json`` + ``experiments/digits/*.csv`` and
-regenerates the §Dry-run and §Roofline tables.  §Paper-validation and
-§Perf carry curated narrative with numbers cited from the artifacts.
+Reads ``experiments/dryrun/*.json`` + ``experiments/digits/*.csv`` +
+``experiments/directions/*.csv`` and regenerates the §Dry-run,
+§Directions and §Roofline tables.  §Paper-validation and §Perf carry
+curated narrative with numbers cited from the artifacts.
 
     PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.md
+    PYTHONPATH=src python -m benchmarks.report --check   # CI gate
+
+``--check`` renders the full report in-memory and fails (exit 1) if
+rendering raises or any required section is missing — a broken report
+fails the build instead of silently shipping a stale EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import argparse
+import contextlib
 import glob
+import io
 import json
 import os
+import sys
 
 import numpy as np
+
+# Every section the rendered report must contain (checked by --check).
+REQUIRED_SECTIONS = (
+    "## §Paper-validation",
+    "## §Runtime",
+    "## §Directions",
+    "## §Dry-run",
+    "## §Roofline",
+)
 
 
 def dryrun_table(mesh: str) -> str:
@@ -81,6 +100,25 @@ def runtime_throughput_table() -> str:
     return hdr + "\n" + "\n".join(rows)
 
 
+def directions_table() -> str:
+    path = "experiments/directions/variance_sweep.csv"
+    if not os.path.exists(path):
+        return ("*(no artifact — run `PYTHONPATH=src python -m benchmarks.run "
+                "--skip-digits` to produce `experiments/directions/"
+                "variance_sweep.csv`)*")
+    d = np.atleast_1d(np.genfromtxt(path, delimiter=",", names=True,
+                                    dtype=None, encoding="utf-8"))
+    rows = [
+        f"| {r['family']} | {int(r['k'])} | {int(r['bytes_fp32'])} / "
+        f"{int(r['bytes_fp16'])} | {r['predicted_var']:.1f} | "
+        f"{r['measured_var']:.1f} | {r['measured_over_predicted']:.3f} |"
+        for r in d
+    ]
+    hdr = ("| family | k | bytes/upload fp32 / fp16 | predicted var | "
+           "measured var | meas/pred |\n|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
 def main():
     from repro.launch.roofline import full_table, markdown_table, what_moves_it
 
@@ -102,6 +140,15 @@ def main():
           "`examples/runtime_scale.py` drives the full event-driven "
           "path at 10⁵ registered clients.\n")
     print(runtime_throughput_table())
+
+    print("\n## §Directions — variance vs bandwidth "
+          "(pluggable projection families, DESIGN §6)\n")
+    print("Estimator variance of the k-block-scalar upload, measured by "
+          "Monte Carlo on a fixed d=256 update against each family's "
+          "closed-form (dⱼ−2+κ)‖δⱼ‖² model (meas/pred ≈ 1 is the tier-1 "
+          "contract).  Bytes are the wire frame 4k+4 (fp32 r) or 2k+4 "
+          "(fp16 r): k dials variance ∝ 1/k against bandwidth ∝ k.\n")
+    print(directions_table())
 
     print("\n## §Dry-run — single pod 16×16 (256 chips)\n")
     print("† XLA cost analysis counts while-loop bodies once (measured "
@@ -135,5 +182,30 @@ def main():
     print(_include("benchmarks/EXPERIMENTS_perf.md"))
 
 
+def check() -> int:
+    """Render the report in-memory; → 0 iff it builds with all sections."""
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf):
+            main()
+    except Exception as e:  # noqa: BLE001 — any render failure breaks CI
+        print(f"report check FAILED: rendering raised {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return 1
+    text = buf.getvalue()
+    missing = [s for s in REQUIRED_SECTIONS if s not in text]
+    if missing:
+        print(f"report check FAILED: missing sections {missing}",
+              file=sys.stderr)
+        return 1
+    print(f"report check OK ({len(text)} chars, "
+          f"{len(REQUIRED_SECTIONS)} sections)")
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="render in-memory and verify sections (CI gate)")
+    args = ap.parse_args()
+    sys.exit(check()) if args.check else main()

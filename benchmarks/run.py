@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig6_energy_*       — accuracy at 50 J transmit energy
   prop21_variance     — Rademacher-vs-Gaussian aggregation-variance gap
                         (derived = measured/theory; theory = 2Σ‖δₙ‖²/N²)
+  direction_*         — variance-vs-bandwidth sweep of the pluggable
+                        direction families × k block scalars (DESIGN §6;
+                        derived = measured/predicted variance + bytes)
   kernel_*            — Pallas kernel per-call latency (interpret mode on
                         CPU — structural check, not TPU timing)
   roofline_*          — dry-run sweep summary
@@ -156,6 +159,63 @@ def bench_kernels():
 
 
 # ---------------------------------------------------------------------------
+# direction families: variance vs bandwidth (DESIGN §6)
+# ---------------------------------------------------------------------------
+
+def bench_direction_sweep():
+    """Measured & predicted estimator variance per (family, k) vs bytes.
+
+    The k-block-scalar dial: upload k scalars (4k + 4 bytes fp32) and
+    cut estimator variance ~k×; the family picks the constant.  Rows
+    land in ``experiments/directions/variance_sweep.csv`` for
+    benchmarks.report §Directions.
+    """
+    import os
+
+    from repro.core.directions import FAMILIES, tree_block_sqnorms
+    from repro.core.projection import (
+        ProjectionMode,
+        project_tree,
+        reconstruct_tree,
+    )
+    from repro.fed.runtime.transport import WireFormat
+
+    d, trials = 256, 8192
+    delta = {"w": jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)}
+    rows = []
+    for name, fam in FAMILIES.items():
+        for k in (1, 4, 16):
+            mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+
+            def one(seed, k=k, mode=mode, dist=fam.distribution):
+                r = project_tree(delta, seed, dist, k, mode)
+                return reconstruct_tree(delta, seed, r, dist, k, mode)["w"]
+
+            f = jax.jit(jax.vmap(one))
+            ts = jnp.arange(trials, dtype=jnp.uint32)
+            f(ts).block_until_ready()           # warmup: exclude compile
+            t0 = time.perf_counter()
+            recs = jax.block_until_ready(f(ts))
+            us = (time.perf_counter() - t0) / trials * 1e6
+            meas = float(jnp.sum(jnp.var(recs, axis=0)))
+            pred = fam.predicted_variance(
+                d, k, block_sqnorms=tree_block_sqnorms(delta, k))
+            by32 = WireFormat("fp32", k).bytes_per_upload
+            by16 = WireFormat("fp16", k).bytes_per_upload
+            emit(f"direction_{name}_k{k}", us,
+                 f"var={meas:.1f}_pred={pred:.1f}_bytes={by32}")
+            rows.append((name, k, by32, by16, pred, meas, meas / pred))
+
+    os.makedirs("experiments/directions", exist_ok=True)
+    with open("experiments/directions/variance_sweep.csv", "w") as f:
+        f.write("family,k,bytes_fp32,bytes_fp16,predicted_var,measured_var,"
+                "measured_over_predicted\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]},{r[2]},{r[3]},"
+                    f"{r[4]:.4f},{r[5]:.4f},{r[6]:.4f}\n")
+
+
+# ---------------------------------------------------------------------------
 # federation runtime: server-side aggregation throughput
 # ---------------------------------------------------------------------------
 
@@ -231,6 +291,7 @@ def main() -> None:
     if not args.skip_digits:
         bench_digits(args.rounds)
     bench_prop21()
+    bench_direction_sweep()
     bench_kernels()
     bench_runtime_throughput()
     bench_roofline()

@@ -1,0 +1,236 @@
+"""Pluggable projection-direction families + the k-block-scalar upload.
+
+DESIGN.md §6.  The paper hard-wires one choice — a single scalar
+``r = ⟨δ, v⟩`` with v ~ N(0, I) or Rademacher — but its own Thm. 2
+(Rademacher strictly beats Gaussian) is the first point on a whole
+tradeoff surface: *which* distribution v is drawn from, and *how many*
+scalars are uploaded, dial estimator variance against uplink bytes.
+This module makes both axes first-class:
+
+* :class:`DirectionFamily` — a direction distribution as data: how to
+  sample a slice of v from a 32-bit seed (counter-based, so every
+  shard/kernel regenerates bit-identical values — DESIGN §1/§3), its
+  closed-form estimator variance model, and its wire cost.
+* **k block scalars** — the flattened parameter vector is split into k
+  contiguous blocks; block j is projected onto its *own* seeded
+  direction and contributes one scalar, so the upload is ``r ∈ ℝᵏ``
+  plus one seed.  Per-block estimators are independent and unbiased;
+  total variance drops from Θ(d) to Θ(d/k) at k× the scalar payload.
+* :func:`optimal_block_weights` — the variance-optimal (MSE-minimizing)
+  per-block aggregation shrinkage for the N-client mean estimator.
+
+Shapes/dtypes: sampled slices are float32 (cast on request); uploads
+are float32 ``(k,)`` per client, ``(N, k)`` stacked; seeds are uint32.
+
+The estimator-variance model (asserted within 5% by
+``tests/test_directions.py``): for one block of dimension d and an iid
+family with E[v]=0, E[v²]=1, E[v⁴]=κ,
+
+    Var‖δ̂ − δ‖² = E‖⟨v,δ⟩v‖² − ‖δ‖² = (d − 2 + κ)·‖δ‖²
+
+(κ=1 Rademacher, κ=3 Gaussian, κ=s sparse-Rademacher; the Walsh-
+Hadamard family is not iid but has v²=1 exactly and pairwise-
+decorrelated coordinates, which is all the identity uses, so it
+inherits the κ=1 curve).  Summing over a k-block partition gives
+``Σⱼ (dⱼ − 2 + κ)‖δⱼ‖²`` — the k-dial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prng import SPARSE_S, Distribution, random_for_shape
+
+__all__ = [
+    "DirectionFamily",
+    "FAMILIES",
+    "get_family",
+    "block_bounds",
+    "block_dims",
+    "tree_block_sqnorms",
+    "optimal_block_weights",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectionFamily:
+    """One projection-direction distribution, as a value (DESIGN §6).
+
+    ``sample`` is a pure function of ``(seed, leaf_tag, element
+    coordinates)`` via the counter-based SplitMix32 chain, so the
+    client encoder, the server reconstructor, the Pallas kernels and
+    the pure-jnp oracle all regenerate bit-identical slices with zero
+    communication — the property that keeps the pod server step
+    collective-free (DESIGN §2) survives every family swap.
+    """
+
+    name: str
+    distribution: Distribution   # the sampling chain in repro.core.prng
+    kurtosis: float              # κ = E[v⁴] (effective κ for non-iid Walsh)
+    description: str = ""
+
+    # ---- sampling ----
+
+    def sample(self, shape: tuple, seed, leaf_tag: int,
+               dtype=jnp.float32) -> jax.Array:
+        """Regenerate this family's direction slice for one leaf.
+
+        Addressed by ``(seed ⊕ leaf_tag, row, col)`` exactly as
+        :func:`repro.core.prng.random_for_shape` — bit-identical under
+        any sharding of the leaf.
+        """
+        return random_for_shape(shape, seed, leaf_tag, self.distribution,
+                                dtype=dtype)
+
+    # ---- variance model ----
+
+    def variance_coeff(self, d: int) -> float:
+        """Var‖δ̂ − δ‖² per unit ‖δ‖² for one block of dimension d."""
+        return float(d) - 2.0 + self.kurtosis
+
+    def predicted_variance(self, total_dim: int, num_blocks: int = 1,
+                           block_sqnorms: Sequence[float] | None = None,
+                           total_sqnorm: float = 1.0) -> float:
+        """Predicted estimator variance for a k-block upload.
+
+        With ``block_sqnorms`` (length ``num_blocks``) the per-block
+        energies are used exactly; otherwise ‖δ‖² is assumed spread
+        proportionally to block size (the isotropic default).
+        """
+        dims = block_dims(total_dim, num_blocks)
+        if block_sqnorms is None:
+            block_sqnorms = [total_sqnorm * dj / total_dim for dj in dims]
+        if len(block_sqnorms) != num_blocks:
+            raise ValueError(
+                f"{len(block_sqnorms)} block energies for {num_blocks} blocks")
+        return float(sum(self.variance_coeff(dj) * float(e)
+                         for dj, e in zip(dims, block_sqnorms)))
+
+    # ---- wire cost ----
+
+    def bits_per_upload(self, num_blocks: int = 1, scalar_bits: int = 32,
+                        seed_bits: int = 32) -> int:
+        """Uplink payload: k scalars + one seed — independent of d.
+
+        Delegates to :func:`repro.fed.costmodel.upload_bits`, the single
+        source of the frame-size formula (lazy import: the cost model is
+        numpy-only, but core stays import-light).
+        """
+        from repro.fed.costmodel import upload_bits
+
+        return upload_bits(num_blocks, scalar_bits, seed_bits)
+
+    def bytes_per_upload(self, num_blocks: int = 1, scalar_bits: int = 32,
+                         seed_bits: int = 32) -> int:
+        return self.bits_per_upload(num_blocks, scalar_bits, seed_bits) // 8
+
+
+FAMILIES = {
+    "gaussian": DirectionFamily(
+        "gaussian", Distribution.GAUSSIAN, kurtosis=3.0,
+        description="paper baseline N(0, I); κ=3"),
+    "rademacher": DirectionFamily(
+        "rademacher", Distribution.RADEMACHER, kurtosis=1.0,
+        description="paper Thm 2 low-variance choice; κ=1"),
+    "sparse_rademacher": DirectionFamily(
+        "sparse_rademacher", Distribution.SPARSE_RADEMACHER,
+        kurtosis=float(SPARSE_S),
+        description=f"Achlioptas ±√s/0, s={SPARSE_S}: ~s× cheaper client "
+                    "inner product, κ=s variance premium"),
+    "hadamard": DirectionFamily(
+        "hadamard", Distribution.HADAMARD, kurtosis=1.0,
+        description="random Walsh row: Rademacher variance at ~2× cheaper "
+                    "generation; 4-wise dependent"),
+}
+
+_BY_DISTRIBUTION = {f.distribution: f for f in FAMILIES.values()}
+
+
+def get_family(family: str | Distribution | DirectionFamily) -> DirectionFamily:
+    """Resolve a family by name, by Distribution, or pass one through."""
+    if isinstance(family, DirectionFamily):
+        return family
+    if isinstance(family, Distribution):
+        return _BY_DISTRIBUTION[family]
+    try:
+        return FAMILIES[family]
+    except KeyError:
+        raise ValueError(
+            f"unknown direction family {family!r}; want one of {list(FAMILIES)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Block geometry: k contiguous blocks over the flattened parameter vector.
+# The same bounds are used by the pure-jnp path (repro.core.projection),
+# the Pallas kernels (leaf-local, via repro.kernels.ops) and the variance
+# models here, so every consumer agrees on which scalar owns which weight.
+# ---------------------------------------------------------------------------
+
+
+def block_bounds(total: int, num_blocks: int, j: int) -> tuple[int, int]:
+    """Contiguous ``[lo, hi)`` bounds of block j of k over ``total`` elems."""
+    lo = (total * j) // num_blocks
+    hi = (total * (j + 1)) // num_blocks
+    return lo, hi
+
+
+def block_dims(total: int, num_blocks: int) -> list[int]:
+    """Sizes of the k blocks (they differ by at most one element)."""
+    return [block_bounds(total, num_blocks, j)[1]
+            - block_bounds(total, num_blocks, j)[0]
+            for j in range(num_blocks)]
+
+
+def tree_block_sqnorms(tree: Any, num_blocks: int) -> np.ndarray:
+    """Per-block ‖δⱼ‖² of a pytree under the k-block flat partition.
+
+    Instrumentation for the variance models and the MSE-optimal weights
+    (concrete values, so host-side numpy).
+    """
+    flat = np.concatenate([
+        np.asarray(leaf, np.float32).reshape(-1)
+        for leaf in jax.tree_util.tree_leaves(tree)])
+    total = flat.size
+    out = np.zeros(num_blocks, np.float64)
+    for j in range(num_blocks):
+        lo, hi = block_bounds(total, num_blocks, j)
+        out[j] = float(np.sum(flat[lo:hi].astype(np.float64) ** 2))
+    return out
+
+
+def optimal_block_weights(
+    family: str | Distribution | DirectionFamily,
+    total_dim: int,
+    num_blocks: int,
+    mean_block_sqnorms: Sequence[float],
+    client_block_sqnorm_sums: Sequence[float],
+    num_clients: int,
+) -> np.ndarray:
+    """Variance-optimal per-block aggregation weights for the N-client mean.
+
+    The unbiased aggregate for block j is ``Aⱼ = (1/N) Σₙ r_{n,j} v_{n,j}``
+    with mean ḡⱼ and variance Vⱼ = (1/N²) Σₙ (dⱼ−2+κ)‖δ_{n,j}‖².  The
+    scalar cⱼ minimizing E‖cⱼAⱼ − ḡⱼ‖² is the Wiener shrinkage
+
+        cⱼ* = ‖ḡⱼ‖² / (‖ḡⱼ‖² + Vⱼ)  ∈ (0, 1],
+
+    which trades a (1−cⱼ)‖ḡⱼ‖ bias for a cⱼ² variance cut — strictly
+    lower MSE than cⱼ=1 whenever Vⱼ > 0.  Inputs are instrumentation
+    values (``mean_block_sqnorms`` = ‖ḡⱼ‖², ``client_block_sqnorm_sums``
+    = Σₙ‖δ_{n,j}‖²); the unbiased default everywhere else is cⱼ = 1,
+    which keeps the k=1 paper path bit-identical.
+    """
+    fam = get_family(family)
+    dims = block_dims(total_dim, num_blocks)
+    s = np.asarray(mean_block_sqnorms, np.float64)
+    q = np.asarray(client_block_sqnorm_sums, np.float64)
+    if s.shape != (num_blocks,) or q.shape != (num_blocks,):
+        raise ValueError((s.shape, q.shape, num_blocks))
+    v = np.array([fam.variance_coeff(dj) for dj in dims]) * q / num_clients**2
+    denom = s + v
+    return np.where(denom > 0, s / np.maximum(denom, 1e-38), 1.0)

@@ -16,10 +16,19 @@ the mesh's data axis and reuses the same building blocks.
 Beyond-paper options (all default to the paper's behavior):
 
 * ``num_projections`` / ``mode`` — multi-projection & block sketches
-  (see :mod:`repro.core.projection`).
+  (see :mod:`repro.core.projection`); :func:`config_for_family` builds
+  the k-block-scalar configuration from a pluggable
+  :class:`repro.core.directions.DirectionFamily` (DESIGN.md §6).
 * ``error_feedback`` — clients keep the compression residual
   e ← (δ + e) − ⟨δ + e, v⟩v locally and re-inject it next round
   (EF-SGD style memory; upload cost unchanged).
+
+Shapes/dtypes: params are any float pytree; ``client_stage`` returns a
+float32 ``(num_projections,)`` scalar vector per client; the stacked
+upload is float32 ``(N, num_projections)`` with uint32 ``(N,)`` seeds;
+``server_aggregate`` accumulates in float32 and casts back to each
+leaf's dtype.  Wire layout of one upload: DESIGN §1/§6 and
+:mod:`repro.fed.runtime.transport`.
 """
 from __future__ import annotations
 
@@ -39,6 +48,9 @@ from repro.core.projection import (
 
 __all__ = [
     "FedScalarConfig",
+    "config_for_family",
+    "family_of",
+    "predicted_estimator_variance",
     "make_local_sgd",
     "client_stage",
     "server_aggregate",
@@ -61,6 +73,53 @@ class FedScalarConfig:
     mode: ProjectionMode = ProjectionMode.FULL
     error_feedback: bool = False         # beyond-paper EF memory
     scalar_bits: int = 32                # wire width of r and ξ
+
+
+def config_for_family(
+    family,
+    num_blocks: int = 1,
+    **overrides,
+) -> FedScalarConfig:
+    """FedScalarConfig for a pluggable direction family + k block scalars.
+
+    ``family`` is anything :func:`repro.core.directions.get_family`
+    resolves (name / Distribution / DirectionFamily); ``num_blocks`` is
+    k, the scalars-per-upload dial (DESIGN §6).  ``k=1`` with the
+    ``"rademacher"`` family returns a config **equal** to the default
+    ``FedScalarConfig()`` — the refactor's bit-for-bit safety anchor
+    (asserted in ``tests/test_directions.py``).
+    """
+    from repro.core.directions import get_family
+
+    fam = get_family(family)
+    mode = ProjectionMode.BLOCK if num_blocks > 1 else ProjectionMode.FULL
+    return FedScalarConfig(
+        distribution=fam.distribution, num_projections=num_blocks,
+        mode=mode, **overrides)
+
+
+def family_of(cfg: FedScalarConfig):
+    """→ the :class:`DirectionFamily` behind a config's distribution."""
+    from repro.core.directions import get_family
+
+    return get_family(cfg.distribution)
+
+
+def predicted_estimator_variance(
+    cfg: FedScalarConfig, params: Any, total_sqnorm: float = 1.0
+) -> float:
+    """Closed-form Var‖δ̂ − δ‖² for one client under this config.
+
+    Uses the family's (d − 2 + κ) model per block (DESIGN §6); for FULL
+    mode with m projections the variance divides by m instead.
+    """
+    fam = family_of(cfg)
+    d = tree_size(params)
+    if cfg.mode == ProjectionMode.BLOCK and cfg.num_projections > 1:
+        return fam.predicted_variance(d, cfg.num_projections,
+                                      total_sqnorm=total_sqnorm)
+    return fam.predicted_variance(d, 1, total_sqnorm=total_sqnorm) \
+        / cfg.num_projections
 
 
 def round_seeds_for(round_idx, client_ids, salt: int = 0x5EED) -> jax.Array:
@@ -156,6 +215,7 @@ def server_aggregate(
     seeds: jax.Array,    # (N,)
     cfg: FedScalarConfig,
     weights: jax.Array | None = None,   # (N,) aggregation weights
+    block_weights: jax.Array | None = None,   # (k,) per-block shrinkage
 ) -> Any:
     """Lines 7–13: regenerate each vₙ from ξₙ, form ĝ, update x.
 
@@ -165,7 +225,10 @@ def server_aggregate(
     ``weights`` (runtime partial-participation path) replaces the
     uniform 1/N mean with ĝ = Σₙ wₙ·rₙ·vₙ — the wₙ carry the
     inverse-probability factor that keeps ĝ unbiased under sampling.
-    ``weights=None`` keeps the paper's equal-weight mean bit-for-bit.
+    ``block_weights`` (length k = num_projections) applies the
+    variance-optimal per-block shrinkage of
+    :func:`repro.core.directions.optimal_block_weights` (DESIGN §6).
+    Both ``None`` keeps the paper's equal-weight mean bit-for-bit.
     """
     n = rs.shape[0]
     zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -173,7 +236,8 @@ def server_aggregate(
     def body(i, acc):
         r_i = rs[i] if weights is None else rs[i] * weights[i]
         rec = reconstruct_tree(
-            params, seeds[i], r_i, cfg.distribution, cfg.num_projections, cfg.mode
+            params, seeds[i], r_i, cfg.distribution, cfg.num_projections,
+            cfg.mode, block_weights=block_weights,
         )
         return jax.tree_util.tree_map(lambda a, r_: a + r_.astype(jnp.float32), acc, rec)
 

@@ -26,12 +26,23 @@ by the low-bias search of Hash Prospector), applied in a chain over
 moment / bit balance / cross-seed decorrelation) is asserted in
 ``tests/test_prng.py``.
 
-Distributions:
+Distributions (the sampling chains behind
+:mod:`repro.core.directions` — DESIGN.md §6):
 
 * ``rademacher`` — exact ±1, E[v]=0, E[v²]=1, E[v⁴]=1 (Prop. 2.1's
   low-variance choice).
 * ``gaussian``  — Box–Muller on two hash uniforms; E[v]=0, E[v²]=1,
   E[v⁴]=3 (the paper's baseline N(0, I) choice).
+* ``sparse_rademacher`` — Achlioptas-style ±√s with probability 1/(2s)
+  each, 0 otherwise (s = :data:`SPARSE_S`); E[v]=0, E[v²]=1, E[v⁴]=s.
+  Mostly-zero coordinates make the client-side inner product ~s×
+  cheaper at a (d−2+s)/(d−1) variance premium over Rademacher.
+* ``hadamard`` — a random Walsh function (a row of the 2³²-point
+  Hadamard matrix, translated by a random offset): exact ±1 from two
+  parity evaluations instead of a three-round SplitMix chain, pairwise
+  decorrelated across coordinates, so the estimator variance matches
+  Rademacher while generation is ~2× cheaper in integer ops.  The
+  price is higher-order structure (coordinates are 4-wise dependent).
 """
 from __future__ import annotations
 
@@ -43,9 +54,11 @@ import jax.numpy as jnp
 
 __all__ = [
     "Distribution",
+    "SPARSE_S",
     "splitmix32",
     "hash_u32",
     "uniform01",
+    "parity32",
     "rademacher_flat",
     "gaussian_flat",
     "random_flat",
@@ -57,6 +70,20 @@ __all__ = [
 _TAG_U1 = 0x9E3779B9  # golden-ratio constant
 _TAG_U2 = 0x85EBCA6B
 
+# Walsh-Hadamard substreams: two masks + two translations per seed.
+_TAG_HAD_MR = 0xC2B2AE35
+_TAG_HAD_MC = 0x27D4EB2F
+_TAG_HAD_TR = 0x165667B1
+_TAG_HAD_TC = 0x9E3779F9
+# Substitute mask when a drawn Hadamard mask is zero (an all-ones row);
+# the substitution skews E[vᵢvⱼ] by O(2⁻³²) — far below float32 noise.
+_HAD_MASK_FALLBACK = 0x9E3779B9
+
+# Sparsity of ``sparse_rademacher``: a coordinate is nonzero with
+# probability 1/SPARSE_S and takes values ±√SPARSE_S.  4 keeps √s exact
+# in float32 and the activation test a 2-bit mask compare.
+SPARSE_S = 4
+
 # Logical sub-block width for the (hi, lo) index split.  16 bits keeps
 # `hi` within uint32 up to d = 2**48 and makes the split cheap in both
 # jnp and Pallas (shift/mask only).
@@ -65,10 +92,16 @@ INDEX_LO_MASK = (1 << INDEX_LO_BITS) - 1
 
 
 class Distribution(enum.Enum):
-    """Sampling distribution for the projection vector v (paper §II-A)."""
+    """Sampling distribution for the projection vector v (paper §II-A).
+
+    The beyond-paper members back the pluggable direction families of
+    :mod:`repro.core.directions` (DESIGN.md §6).
+    """
 
     GAUSSIAN = "gaussian"
     RADEMACHER = "rademacher"
+    SPARSE_RADEMACHER = "sparse_rademacher"
+    HADAMARD = "hadamard"
 
 
 def _u32(x) -> jax.Array:
@@ -132,6 +165,50 @@ def uniform01(bits: jax.Array) -> jax.Array:
     return (bits.astype(jnp.float32) + 1.0) * jnp.float32(2.0**-32)
 
 
+def parity32(x: jax.Array) -> jax.Array:
+    """XOR-fold parity of each uint32 lane (no popcount: Pallas-legal)."""
+    x = _u32(x)
+    x = x ^ (x >> 16)
+    x = x ^ (x >> 8)
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    return x & _u32(1)
+
+
+def _sparse_rademacher_vals(seed, a, b) -> jax.Array:
+    """Elementwise sparse-Rademacher values at coordinates ``(a, b)``.
+
+    The low log2(s) bits gate activation (probability exactly 1/s);
+    bit 8 carries the sign, as in the dense Rademacher chain.
+    """
+    bits = hash_u32(seed, a, b, tag=_TAG_U1)
+    active = (bits & _u32(SPARSE_S - 1)) == 0
+    sign = jnp.where((bits >> 8) & _u32(1) == 1, 1.0, -1.0)
+    return jnp.where(active, sign * jnp.float32(float(SPARSE_S) ** 0.5),
+                     jnp.float32(0.0))
+
+
+def _hadamard_vals(seed, a, b) -> jax.Array:
+    """Elementwise random-Walsh values at coordinates ``(a, b)``.
+
+    v = (−1)^⟨a⊕t_a, m_a⟩ · (−1)^⟨b⊕t_b, m_b⟩ with per-seed masks m and
+    translations t — a translated row of the 2³²×2³² Hadamard matrix on
+    each coordinate axis.  Exactly ±1, E[v]=0 and E[vᵢvⱼ]=𝟙[i=j] up to
+    the O(2⁻³²) zero-mask substitution; two parities per element instead
+    of three SplitMix rounds.
+    """
+    s = _u32(seed)
+    m_a = splitmix32(s ^ _u32(_TAG_HAD_MR))
+    m_a = jnp.where(m_a == 0, _u32(_HAD_MASK_FALLBACK), m_a)
+    m_b = splitmix32(s ^ _u32(_TAG_HAD_MC))
+    m_b = jnp.where(m_b == 0, _u32(_HAD_MASK_FALLBACK), m_b)
+    t_a = splitmix32(s ^ _u32(_TAG_HAD_TR))
+    t_b = splitmix32(s ^ _u32(_TAG_HAD_TC))
+    bit = parity32((_u32(a) ^ t_a) & m_a) ^ parity32((_u32(b) ^ t_b) & m_b)
+    return jnp.where(bit == 0, 1.0, -1.0)
+
+
 def rademacher_flat(seed, base: int, n: int, dtype=jnp.float32) -> jax.Array:
     """±1 Rademacher vector for global indices ``base + [0, n)``."""
     hi, lo = _split_index(base, n)
@@ -158,11 +235,17 @@ def random_flat(
     distribution: Distribution = Distribution.RADEMACHER,
     dtype=jnp.float32,
 ) -> jax.Array:
-    """Dispatch on the projection distribution (paper §II-A)."""
+    """Dispatch on the projection distribution (paper §II-A, DESIGN §6)."""
     if distribution == Distribution.RADEMACHER:
         return rademacher_flat(seed, base, n, dtype=dtype)
     if distribution == Distribution.GAUSSIAN:
         return gaussian_flat(seed, base, n, dtype=dtype)
+    if distribution == Distribution.SPARSE_RADEMACHER:
+        hi, lo = _split_index(base, n)
+        return _sparse_rademacher_vals(seed, hi, lo).astype(dtype)
+    if distribution == Distribution.HADAMARD:
+        hi, lo = _split_index(base, n)
+        return _hadamard_vals(seed, hi, lo).astype(dtype)
     raise ValueError(f"unknown distribution: {distribution}")
 
 
@@ -242,6 +325,10 @@ def random_for_shape(
         u2 = uniform01(hash_u32(s, row, col, tag=_TAG_U2))
         r = jnp.sqrt(-2.0 * jnp.log(u1))
         out = (r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)).astype(dtype)
+    elif distribution == Distribution.SPARSE_RADEMACHER:
+        out = _sparse_rademacher_vals(s, row, col).astype(dtype)
+    elif distribution == Distribution.HADAMARD:
+        out = _hadamard_vals(s, row, col).astype(dtype)
     else:
         raise ValueError(f"unknown distribution: {distribution}")
     return out.reshape(shape)

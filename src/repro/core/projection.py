@@ -16,15 +16,24 @@ shard generates exactly its slice of ``v``, so
 * ``project_tree``     costs one scalar ``psum`` over the model axis,
 * ``reconstruct_tree`` costs **zero** communication.
 
-Beyond-paper extensions implemented here:
+Beyond-paper extensions implemented here (DESIGN.md §6):
 
 * ``num_projections m > 1`` — the paper's "future work": m independent
   scalars per client cut the projection variance from O(d) to O(d/m)
   at O(m) upload (§II, discussion after Thm 2.1).
-* ``block`` mode — a block-diagonal sketch: d is split into m
-  contiguous index blocks, block j is projected only onto its own
-  seeded vector.  Same O(m) upload; strictly smaller variance than m
-  full-d projections because cross-block noise terms vanish.
+* ``block`` mode — the k-block-scalar upload: d is split into k
+  contiguous index blocks (:func:`repro.core.directions.block_bounds`),
+  block j is projected only onto its own seeded vector and owns one
+  scalar of ``r ∈ ℝᵏ``.  Same O(k) upload; strictly smaller variance
+  than k full-d projections because cross-block noise terms vanish.
+* any :class:`repro.core.directions.DirectionFamily` distribution —
+  the ``distribution`` argument accepts every registered family's
+  sampling chain (Gaussian / Rademacher / sparse-Rademacher / Walsh-
+  Hadamard), all counter-based and bit-identical across consumers.
+
+Shapes/dtypes: ``project_tree`` returns float32 ``(m,)``;
+``reconstruct_tree`` returns a pytree matching ``like`` (accumulated in
+float32, cast to each leaf's dtype); seeds are uint32 scalars.
 """
 from __future__ import annotations
 
@@ -71,11 +80,36 @@ def _proj_seed(seed, j: int):
     return splitmix32(jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(0xA511E9B3 + j))
 
 
+# float32 flat-index masks are exact only below 2**24 elements per leaf
+# (same domain as the kernels' repro.kernels.ops.leaf_block_bounds).
+_MAX_MASKED_LEAF = 1 << 24
+
+
+def _check_block_mask_domain(leaves) -> None:
+    """BLOCK mode guard: loud failure instead of silently-rounded bounds.
+
+    Without it, boundary elements of huge leaves would migrate between
+    blocks after float32 rounding — self-consistent but drifted from the
+    exact integer partition the variance models and
+    :func:`repro.core.directions.optimal_block_weights` assume.
+    """
+    for _, leaf in leaves:
+        if leaf.size > _MAX_MASKED_LEAF:
+            raise ValueError(
+                f"leaf of {leaf.size} elements exceeds the exact float32 "
+                f"block-mask domain (2**24); use fewer/larger blocks or "
+                f"split the leaf")
+
+
 def _block_bounds(total: int, m: int, j: int) -> tuple[int, int]:
-    """Contiguous [lo, hi) bounds of block j of m over `total` elements."""
-    lo = (total * j) // m
-    hi = (total * (j + 1)) // m
-    return lo, hi
+    """Contiguous [lo, hi) bounds of block j of m over `total` elements.
+
+    Single source of truth lives in :func:`repro.core.directions.
+    block_bounds` (imported lazily to avoid a module cycle); kernels and
+    variance models use the same partition.
+    """
+    from repro.core.directions import block_bounds
+    return block_bounds(total, m, j)
 
 
 def project_tree(
@@ -93,6 +127,8 @@ def project_tree(
     """
     leaves = _leaves(delta)
     total = sum(l.size for _, l in leaves)
+    if mode == ProjectionMode.BLOCK and num_projections > 1:
+        _check_block_mask_domain(leaves)
     rs = []
     for j in range(num_projections):
         sj = _proj_seed(seed, j)
@@ -111,8 +147,9 @@ def project_tree(
             v = random_for_shape(leaf.shape, sj, tag, distribution)
             x = leaf.astype(jnp.float32)
             if blo > offset or bhi < offset + size:
-                # Partial overlap: mask by global flat position.  Leaves are
-                # large relative to m so this happens at most twice per block.
+                # Partial overlap: mask by leaf-local flat position.  Leaves
+                # are large relative to m so this happens at most twice per
+                # block.
                 mask = _block_mask(leaf.shape, offset, blo, bhi)
                 acc = acc + jnp.sum(x * v * mask)
             else:
@@ -123,7 +160,15 @@ def project_tree(
 
 
 def _block_mask(shape: tuple, offset: int, blo: int, bhi: int) -> jax.Array:
-    """1.0 where the element's global flat index lies in [blo, bhi)."""
+    """1.0 where the element's global flat index lies in [blo, bhi).
+
+    The comparison runs in **leaf-local** coordinates (global bounds
+    shifted by the leaf offset and clamped), exactly like the kernels'
+    ``repro.kernels.ops.leaf_block_bounds``: float32 flat indices are
+    exact below 2²⁴ *per leaf*, independent of where the leaf sits in
+    an arbitrarily large global tree, and the two paths agree on which
+    scalar owns every boundary element.
+    """
     # Row/col decomposition mirrors random_for_shape so it partitions too.
     if len(shape) == 0:
         shape2 = (1, 1)
@@ -133,6 +178,9 @@ def _block_mask(shape: tuple, offset: int, blo: int, bhi: int) -> jax.Array:
         shape2 = tuple(shape)
     ndim = len(shape2)
     lastdim = shape2[-1]
+    size = 1
+    for s in shape2:
+        size *= s
     row = jnp.zeros(shape2, dtype=jnp.float32)
     stride = 1
     for d in range(ndim - 2, -1, -1):
@@ -140,10 +188,10 @@ def _block_mask(shape: tuple, offset: int, blo: int, bhi: int) -> jax.Array:
         row = row + iota * float(stride)
         stride *= shape2[d]
     col = jax.lax.broadcasted_iota(jnp.float32, shape2, ndim - 1)
-    # float32 is exact for indices < 2**24; block masks are only used in
-    # the small/medium-d regime (the sketch is per-leaf elsewhere).
-    flat = row * float(lastdim) + col + float(offset)
-    mask = jnp.logical_and(flat >= float(blo), flat < float(bhi))
+    flat = row * float(lastdim) + col
+    lo = min(max(blo - offset, 0), size)
+    hi = min(max(bhi - offset, 0), size)
+    mask = jnp.logical_and(flat >= float(lo), flat < float(max(hi, lo)))
     return mask.astype(jnp.float32).reshape(shape)
 
 
@@ -155,6 +203,7 @@ def reconstruct_tree(
     num_projections: int = 1,
     mode: ProjectionMode = ProjectionMode.FULL,
     scale: float | jax.Array = 1.0,
+    block_weights: jax.Array | None = None,
 ) -> Any:
     """Decode scalars back to an update pytree: ``δ̂ = (scale/m) Σⱼ rⱼ vⱼ``.
 
@@ -162,10 +211,19 @@ def reconstruct_tree(
     averaging keeps the estimator unbiased for any ``num_projections``.
     With BLOCK mode each block is reconstructed only from its own
     scalar (no 1/m factor — blocks partition the index space).
+
+    ``block_weights`` (length m, default ones) rescales each scalar's
+    contribution — the hook for the MSE-optimal per-block shrinkage of
+    :func:`repro.core.directions.optimal_block_weights` (DESIGN §6).
+    ``None`` keeps the unbiased estimator bit-for-bit.
     """
     leaves = _leaves(like)
     total = sum(l.size for _, l in leaves)
+    if mode == ProjectionMode.BLOCK and num_projections > 1:
+        _check_block_mask_domain(leaves)
     r = jnp.asarray(r, jnp.float32).reshape(-1)
+    if block_weights is not None:
+        r = r * jnp.asarray(block_weights, jnp.float32).reshape(-1)
     m = num_projections
     out = []
     offset = 0

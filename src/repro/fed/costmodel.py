@@ -26,7 +26,21 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ChannelConfig", "CostModel", "table1_upload_times"]
+__all__ = ["ChannelConfig", "CostModel", "upload_bits", "table1_upload_times"]
+
+
+def upload_bits(num_blocks: int = 1, scalar_bits: int = 32,
+                seed_bits: int = 32) -> int:
+    """Uplink payload per client per round for a k-block-scalar frame.
+
+    Bytes — and therefore every wall-clock and energy figure eq. (12)/
+    (13) produces — scale linearly with k (DESIGN §6): the k-dial
+    trades exactly ``scalar_bits`` of uplink per unit of variance
+    reduction bought.  Single source of the frame-size formula:
+    ``WireFormat.bits_per_upload`` and ``DirectionFamily
+    .bits_per_upload`` both delegate here.
+    """
+    return num_blocks * scalar_bits + seed_bits
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,12 @@ sampled fraction participates per round, uploads that arrive staggered
 over a lossy channel, stragglers cut by a deadline, and stale uploads
 trickling in rounds late.
 
-This package is the missing server side (DESIGN.md §5):
+This package is the missing server side (DESIGN.md §5; the pluggable
+projection surface it exposes is §6).  Shapes/dtypes at the module
+boundaries: uploads are float32 ``(C, k)`` scalar frames with uint32
+``(C,)`` seeds for a cohort of C; wire packets are ``4k + 4`` bytes at
+fp32 scalar width (``2k + 4`` at fp16/bf16); model params are any
+float pytree and are only touched at the single per-round apply.
 
 * :mod:`sampling`  — client-population registry + per-round cohort
   sampling (uniform / weighted / Poisson) with inverse-probability

@@ -11,10 +11,17 @@ Per round the engine
   4. pushes each (r, ξ) upload through the byte-level wire codec and
      the lossy/laggy channel (``transport``),
   5. lets the streaming aggregator close the round at the deadline
-     (``server``) and applies  x ← x + lr·Σ coeffᵢ·rᵢ·v(ξᵢ)  — via the
-     fori-loop path or, for large cohorts, the fused Pallas
-     reconstruction kernel with its client-chunk grid dimension,
-  6. charges the round to the bandwidth/energy cost model.
+     (``server``) and applies  x ← x + lr·Σᵢⱼ coeffᵢ·rᵢⱼ·vⱼ(ξᵢ)  — via
+     the fori-loop path or, for large cohorts, the fused Pallas
+     reconstruction kernel with its client-chunk **and block** grid
+     dimensions (DESIGN §2/§6),
+  6. charges the round to the bandwidth/energy cost model (bytes and
+     energy scale with k, the scalars-per-upload dial).
+
+The projection is pluggable (DESIGN §6): ``family`` selects any
+registered :class:`repro.core.directions.DirectionFamily` and
+``num_projections``/``projection_mode`` set the k-block-scalar upload;
+uploads are float32 ``(C, k)`` with uint32 ``(C,)`` seeds throughout.
 
 Fast path: a fully-participating, synchronous, lossless, fp32
 configuration is *exactly* the paper's §III experiment, so the engine
@@ -61,7 +68,11 @@ class RuntimeConfig:
     local_lr: float = 3e-3              # α
     server_lr: float = 1.0
     distribution: Distribution = Distribution.RADEMACHER
-    num_projections: int = 1            # m
+    family: str | None = None           # direction family name (DESIGN §6);
+                                        # overrides `distribution` when set
+    num_projections: int = 1            # k scalars per upload
+    projection_mode: str = "full"       # "full" (m full-d projections) or
+                                        # "block" (k block scalars)
     seed: int = 0
     scalar_format: str = "fp32"         # wire width of r (fp32 | fp16 | bf16)
     eval_every: int = 1
@@ -71,11 +82,20 @@ class RuntimeConfig:
     server: ServerConfig = dataclasses.field(default_factory=ServerConfig)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
 
+    def resolved_distribution(self) -> Distribution:
+        if self.family is not None:
+            from repro.core.directions import get_family
+            return get_family(self.family).distribution
+        return self.distribution
+
     def protocol(self) -> fs.FedScalarConfig:
+        from repro.core.projection import ProjectionMode
         return fs.FedScalarConfig(
             local_steps=self.local_steps, local_lr=self.local_lr,
-            server_lr=self.server_lr, distribution=self.distribution,
-            num_projections=self.num_projections)
+            server_lr=self.server_lr,
+            distribution=self.resolved_distribution(),
+            num_projections=self.num_projections,
+            mode=ProjectionMode(self.projection_mode))
 
     def wire(self) -> WireFormat:
         return WireFormat(scalar=self.scalar_format,
@@ -87,6 +107,8 @@ class RuntimeConfig:
 
 def _is_fused_equivalent(cfg: RuntimeConfig, num_shards: int) -> bool:
     """True iff the config degenerates to the paper-scale simulation."""
+    from repro.fed.simulation import METHOD_FOR_DISTRIBUTION
+
     return (
         cfg.participation == 1.0
         and cfg.sampler in ("uniform", "weighted")
@@ -98,7 +120,7 @@ def _is_fused_equivalent(cfg: RuntimeConfig, num_shards: int) -> bool:
         and cfg.scalar_format == "fp32"
         and cfg.num_projections == 1
         and cfg.server_lr == 1.0
-        and cfg.distribution in (Distribution.RADEMACHER, Distribution.GAUSSIAN)
+        and cfg.resolved_distribution() in METHOD_FOR_DISTRIBUTION
     )
 
 
@@ -199,9 +221,9 @@ def run_federation(
     def apply_kernel(params, rs, seeds, weights):
         from repro.kernels import ops
         return ops.server_update_kernel(
-            params, rs[:, 0] if rs.ndim == 2 else rs, seeds,
-            server_lr=cfg.server_lr, distribution=cfg.distribution,
-            weights=weights)
+            params, rs, seeds,
+            server_lr=cfg.server_lr, distribution=pcfg.distribution,
+            weights=weights, mode=pcfg.mode)
 
     kern_thresh = cfg.kernel_cohort_threshold
     if kern_thresh is None:
@@ -262,7 +284,8 @@ def run_federation(
             w_b = np.zeros(bucket, np.float32)
             w_b[:a] = acoeffs.astype(np.float32)
             use_kernel = (kern_thresh is not None and a >= kern_thresh
-                          and cfg.num_projections == 1)
+                          and (cfg.num_projections == 1
+                               or cfg.projection_mode == "block"))
             applier = apply_kernel if use_kernel else apply_fori
             params = applier(params, jnp.asarray(rs_b), jnp.asarray(seeds_b),
                              jnp.asarray(w_b))
@@ -322,11 +345,13 @@ def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
     trajectory is bit-for-bit the paper-scale experiment; only the cost
     accounting is redone with the runtime's per-upload channel draws.
     """
-    from repro.fed.simulation import SimulationConfig, run_simulation
+    from repro.fed.simulation import (
+        METHOD_FOR_DISTRIBUTION,
+        SimulationConfig,
+        run_simulation,
+    )
 
-    method = ("fedscalar_rademacher"
-              if cfg.distribution == Distribution.RADEMACHER
-              else "fedscalar_gaussian")
+    method = METHOD_FOR_DISTRIBUTION[cfg.resolved_distribution()]
     sim = SimulationConfig(
         method=method, rounds=cfg.rounds, num_clients=cfg.population,
         local_steps=cfg.local_steps, batch_size=cfg.batch_size,

@@ -1,15 +1,24 @@
 """The wire: (r, ξ) uplink codec, lossy channel, downlink broadcast.
 
 Everything the paper abstracts as "upload two scalars" is made concrete
-here.  An uplink packet is
+here (DESIGN.md §1/§5; the k-scalar generalization is §6).  An uplink
+packet is the **k-scalar frame**
 
-    [ r₀ … r_{m−1} | ξ ]      m scalars at ``scalar`` width + u32 seed
+    [ r₀ … r_{k−1} | ξ ]      k scalars at ``scalar`` width + u32 seed
 
 in little-endian byte order — 8 bytes per client per round for the
-paper's protocol (m = 1, fp32 r).  Halving the scalar to fp16/bf16
-brings it to 6 bytes; the server aggregates whatever the *decoded*
-value is, so wire quantization error flows through the estimator
-exactly as it would in deployment.
+paper's protocol (k = 1, fp32 r), 4k + 4 in general.  Halving the
+scalar to fp16/bf16 brings the paper frame to 6 bytes; the server
+aggregates whatever the *decoded* value is, so wire quantization error
+flows through the estimator exactly as it would in deployment.  The
+direction family never rides the wire: the server resolves it from
+round configuration, and regenerating v from ξ is family-agnostic by
+construction (DESIGN §1).
+
+Shapes/dtypes: encode takes float32 ``(k,)`` + int seed; a cohort
+transmit takes float32 ``(C, k)`` and uint32 ``(C,)`` and returns the
+decoded float32 ``(C, k)`` — wire-width-rounded — plus per-upload
+latency/loss.
 
 The channel model rides on :class:`repro.fed.costmodel.CostModel`: one
 independent lognormal rate draw per upload gives per-upload latencies
@@ -22,7 +31,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.fed.costmodel import CostModel
+from repro.fed.costmodel import CostModel, upload_bits
 
 __all__ = [
     "SCALAR_WIDTHS",
@@ -51,10 +60,15 @@ SCALAR_WIDTHS = {
 
 @dataclasses.dataclass(frozen=True)
 class WireFormat:
-    """Uplink packet layout: m projection scalars + one u32 seed."""
+    """Uplink packet layout: k projection/block scalars + one u32 seed.
+
+    ``num_projections`` is k — one scalar per parameter block in BLOCK
+    mode, or m independent full-d projections (DESIGN §6); the frame
+    layout is identical either way.
+    """
 
     scalar: str = "fp32"          # width of each r scalar
-    num_projections: int = 1      # m
+    num_projections: int = 1      # k
 
     def __post_init__(self):
         if self.scalar not in SCALAR_WIDTHS:
@@ -62,12 +76,17 @@ class WireFormat:
                 f"unknown scalar format {self.scalar!r}; want {list(SCALAR_WIDTHS)}")
 
     @property
+    def k(self) -> int:
+        """Scalars per frame (alias of ``num_projections``)."""
+        return self.num_projections
+
+    @property
     def scalar_dtype(self) -> np.dtype:
         return SCALAR_WIDTHS[self.scalar][0]()
 
     @property
     def bits_per_upload(self) -> int:
-        return self.num_projections * SCALAR_WIDTHS[self.scalar][1] + 32
+        return upload_bits(self.num_projections, SCALAR_WIDTHS[self.scalar][1])
 
     @property
     def bytes_per_upload(self) -> int:

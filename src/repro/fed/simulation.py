@@ -33,9 +33,20 @@ METHODS = (
     "fedavg",
     "qsgd",
     "fedscalar_m8",          # beyond-paper: 8 full-d projections
-    "fedscalar_block8",      # beyond-paper: 8-block sketch
+    "fedscalar_block8",      # beyond-paper: 8-block-scalar upload (DESIGN §6)
     "fedscalar_ef",          # beyond-paper: error feedback
+    "fedscalar_sparse",      # beyond-paper: sparse-Rademacher directions
+    "fedscalar_hadamard",    # beyond-paper: random-Walsh directions
 )
+
+# run_simulation method implementing each direction family at k=1 — the
+# fused fast path of the federation runtime keys on this (DESIGN §5/§6).
+METHOD_FOR_DISTRIBUTION = {
+    Distribution.RADEMACHER: "fedscalar_rademacher",
+    Distribution.GAUSSIAN: "fedscalar_gaussian",
+    Distribution.SPARSE_RADEMACHER: "fedscalar_sparse",
+    Distribution.HADAMARD: "fedscalar_hadamard",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +69,11 @@ def _protocol(cfg: SimulationConfig):
     if m.startswith("fedscalar"):
         if m == "fedscalar_gaussian":
             pc = fs.FedScalarConfig(distribution=Distribution.GAUSSIAN, **base)
+        elif m == "fedscalar_sparse":
+            pc = fs.FedScalarConfig(
+                distribution=Distribution.SPARSE_RADEMACHER, **base)
+        elif m == "fedscalar_hadamard":
+            pc = fs.FedScalarConfig(distribution=Distribution.HADAMARD, **base)
         elif m == "fedscalar_m8":
             pc = fs.FedScalarConfig(num_projections=8, **base)
         elif m == "fedscalar_block8":

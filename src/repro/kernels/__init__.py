@@ -1,3 +1,28 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas TPU kernels for the FedScalar hot paths + their oracles.
+
+Every kernel regenerates the seeded direction v per VMEM tile from the
+same counter-based SplitMix32 chain as :mod:`repro.core.prng`
+(DESIGN.md §3) — v never exists in HBM — and supports every registered
+direction family (DESIGN §6):
+
+* :mod:`seeded_projection`  — client encode ``rⱼ = ⟨δ, vⱼ(ξ)⟩``:
+  float matrix in, float32 ``(k, 1)`` block scalars out; grid is
+  block-index × matrix tiles.
+* :mod:`seeded_reconstruct` — server decode/update
+  ``y = x + s·Σₙⱼ rₙⱼ·vₙⱼ(ξₙ)``: params tile in/out (own dtype,
+  float32 accumulation), uint32 ``(N,)`` round seeds + float32
+  ``(N, k)`` scalars in SMEM; grid is matrix tiles × block × client
+  chunks, so HBM traffic is independent of both N and k (DESIGN §2).
+* :mod:`qsgd_quant`         — QSGD stochastic-rounding round trip
+  (the paper's quantization baseline).
+* :mod:`ops`                — pytree → block-aligned 2-D dispatch;
+  the public entry points (``project_tree_kernel``,
+  ``server_update_kernel``, ``qsgd_roundtrip_kernel``).
+* :mod:`ref`                — pure-jnp oracles; bit-compatibility with
+  the kernels is asserted in ``tests/test_kernels.py``.
+* :mod:`common`             — the shared in-kernel PRNG helpers.
+
+Import :mod:`repro.kernels.ops` (not this package) from hot paths; the
+package module stays import-light so non-TPU consumers never pay for
+Pallas machinery they don't use.
+"""

@@ -15,6 +15,14 @@ from jax.experimental.pallas import tpu as pltpu
 _TAG_U1 = 0x9E3779B9
 _TAG_U2 = 0x85EBCA6B
 
+# Walsh-Hadamard / sparse constants — must match repro.core.prng exactly.
+_TAG_HAD_MR = 0xC2B2AE35
+_TAG_HAD_MC = 0x27D4EB2F
+_TAG_HAD_TR = 0x165667B1
+_TAG_HAD_TC = 0x9E3779F9
+_HAD_MASK_FALLBACK = 0x9E3779B9
+SPARSE_S = 4
+
 
 def interpret_mode():
     """Value for ``pallas_call(interpret=...)`` on non-TPU backends.
@@ -56,11 +64,23 @@ def uniform01(bits):
     return (bits.astype(jnp.float32) + 1.0) * jnp.float32(2.0**-32)
 
 
+def parity32(x):
+    """XOR-fold parity of each uint32 lane (no popcount: Pallas-legal)."""
+    x = _u32(x)
+    x = x ^ (x >> 16)
+    x = x ^ (x >> 8)
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    return x & _u32(1)
+
+
 def gen_tile(seed_folded, row, col, distribution: str):
     """v values for a tile of global (row, col) uint32 coordinate arrays.
 
-    Matches ``repro.core.prng.random_for_shape`` exactly: the caller
-    folds the leaf tag into the seed first (``fold_seed``).
+    Matches ``repro.core.prng.random_for_shape`` exactly for every
+    direction family (DESIGN.md §6): the caller folds the leaf tag into
+    the seed first (``fold_seed``).
     """
     if distribution == "rademacher":
         bits = hash_u32(seed_folded, row, col, _TAG_U1)
@@ -71,4 +91,20 @@ def gen_tile(seed_folded, row, col, distribution: str):
         u2 = uniform01(hash_u32(seed_folded, row, col, _TAG_U2))
         r = jnp.sqrt(-2.0 * jnp.log(u1))
         return r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)
+    if distribution == "sparse_rademacher":
+        bits = hash_u32(seed_folded, row, col, _TAG_U1)
+        active = (bits & _u32(SPARSE_S - 1)) == 0
+        sign = jnp.where((bits >> 8) & _u32(1) == 1, 1.0, -1.0)
+        return jnp.where(active, sign * jnp.float32(float(SPARSE_S) ** 0.5),
+                         jnp.float32(0.0))
+    if distribution == "hadamard":
+        s = _u32(seed_folded)
+        m_r = splitmix32(s ^ _u32(_TAG_HAD_MR))
+        m_r = jnp.where(m_r == 0, _u32(_HAD_MASK_FALLBACK), m_r)
+        m_c = splitmix32(s ^ _u32(_TAG_HAD_MC))
+        m_c = jnp.where(m_c == 0, _u32(_HAD_MASK_FALLBACK), m_c)
+        t_r = splitmix32(s ^ _u32(_TAG_HAD_TR))
+        t_c = splitmix32(s ^ _u32(_TAG_HAD_TC))
+        bit = parity32((_u32(row) ^ t_r) & m_r) ^ parity32((_u32(col) ^ t_c) & m_c)
+        return jnp.where(bit == 0, 1.0, -1.0).astype(jnp.float32)
     raise ValueError(distribution)

@@ -4,14 +4,23 @@ These mirror the pure-jnp protocol functions bit-for-bit (same hash,
 same (row, col) addressing, same per-projection seed folding), so the
 kernel path can replace the jnp path anywhere:
 
-* ``project_tree_kernel``    ≡ repro.core.projection.project_tree (m=1)
+* ``project_tree_kernel``    ≡ repro.core.projection.project_tree
+  (any direction family, k=1 full or k block scalars — DESIGN.md §6)
 * ``server_update_kernel``   ≡ repro.core.fedscalar.server_aggregate
 * ``qsgd_roundtrip_kernel``  — kernelized QSGD quantize→dequantize
 
 Leaves are viewed as (leading-dims, last-dim) matrices and zero-padded
 to block multiples; zero padding contributes nothing to the projection
 and padded outputs are sliced away, so results are exact, not
-approximate.
+approximate.  The k-block partition is computed over the **global**
+flattened tree (``repro.core.directions.block_bounds``) and translated
+to leaf-local flat bounds here, so the kernels and the jnp oracle agree
+on which scalar owns which weight.
+
+Shapes/dtypes: uploads are float32 — ``(k,)`` from the projection,
+``(N,)``/``(N, k)`` into the server update; seeds are uint32 round
+seeds ``(N,)``; params keep their own dtypes (float32 accumulation
+in-kernel).
 """
 from __future__ import annotations
 
@@ -21,18 +30,24 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.directions import block_bounds
 from repro.core.prng import Distribution
-from repro.core.projection import _proj_seed
+from repro.core.projection import ProjectionMode, _proj_seed
 from repro.kernels.qsgd_quant import qsgd_kernel_call
-from repro.kernels.seeded_projection import projection_kernel_call
+from repro.kernels.seeded_projection import projection_blocks_kernel_call
 from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
 
 __all__ = [
     "as_blocked_2d",
+    "leaf_block_bounds",
     "project_tree_kernel",
     "server_update_kernel",
     "qsgd_roundtrip_kernel",
 ]
+
+# float32 flat-index masks (shared with the jnp BLOCK path) are exact
+# only below 2**24 elements per leaf.
+_MAX_MASKED_LEAF = 1 << 24
 
 
 def _pick_block(rows: int, cols: int) -> tuple:
@@ -62,53 +77,109 @@ def _dist_name(distribution: Distribution) -> str:
     return distribution.value
 
 
+def leaf_block_bounds(
+    leaf_offset: int, leaf_size: int, total: int, num_blocks: int,
+    mode: ProjectionMode = ProjectionMode.BLOCK,
+) -> tuple[list[float], list[float]]:
+    """Leaf-local flat [lo, hi) of every global block (clamped, floats).
+
+    Blocks that miss the leaf clamp to an empty range; FULL mode maps
+    every projection onto the whole leaf.
+    """
+    if mode != ProjectionMode.BLOCK or num_blocks == 1:
+        return [0.0] * num_blocks, [float(leaf_size)] * num_blocks
+    if leaf_size > _MAX_MASKED_LEAF:
+        raise ValueError(
+            f"leaf of {leaf_size} elements exceeds the exact float32 "
+            f"block-mask domain (2**24); use fewer/larger blocks or split "
+            f"the leaf")
+    los, his = [], []
+    for j in range(num_blocks):
+        blo, bhi = block_bounds(total, num_blocks, j)
+        lo = min(max(blo - leaf_offset, 0), leaf_size)
+        hi = min(max(bhi - leaf_offset, 0), leaf_size)
+        los.append(float(lo))
+        his.append(float(max(hi, lo)))
+    return los, his
+
+
 def project_tree_kernel(
     delta: Any,
     seed,
     distribution: Distribution = Distribution.RADEMACHER,
     interpret: bool | None = None,
+    num_blocks: int = 1,
+    mode: ProjectionMode = ProjectionMode.FULL,
 ) -> jax.Array:
-    """Kernelized FedScalar encode (single projection): → (1,) float32."""
-    sj = _proj_seed(seed, 0)
-    acc = jnp.float32(0.0)
-    for tag, leaf in enumerate(jax.tree_util.tree_leaves(delta)):
-        x2d, block, _ = as_blocked_2d(leaf)
-        acc = acc + projection_kernel_call(
-            x2d, sj, tag, _dist_name(distribution), block, interpret=interpret)
-    return acc.reshape(1)
+    """Kernelized FedScalar encode: → float32 ``(num_blocks,)``.
+
+    ``num_blocks=1`` is the paper's single scalar; BLOCK mode emits the
+    k-block-scalar upload ``r ∈ ℝᵏ`` in one fused sweep per leaf.
+    """
+    seeds = jnp.stack([_proj_seed(seed, j) for j in range(num_blocks)])
+    leaves = jax.tree_util.tree_leaves(delta)
+    total = sum(leaf.size for leaf in leaves)
+    masked = mode == ProjectionMode.BLOCK and num_blocks > 1
+    acc = jnp.zeros((num_blocks,), jnp.float32)
+    offset = 0
+    for tag, leaf in enumerate(leaves):
+        x2d, block, (rows, cols) = as_blocked_2d(leaf)
+        lo, hi = leaf_block_bounds(offset, leaf.size, total, num_blocks, mode)
+        acc = acc + projection_blocks_kernel_call(
+            x2d, seeds, tag, jnp.asarray(lo, jnp.float32),
+            jnp.asarray(hi, jnp.float32), _dist_name(distribution), block,
+            orig_cols=cols, interpret=interpret, masked=masked)
+        offset += leaf.size
+    return acc
 
 
 def server_update_kernel(
     params: Any,
-    rs: jax.Array,        # (N, 1) or (N,) uploaded scalars
+    rs: jax.Array,        # (N,), (N, 1) or (N, k) uploaded scalars
     seeds: jax.Array,     # (N,) round seeds
     server_lr: float = 1.0,
     distribution: Distribution = Distribution.RADEMACHER,
     interpret: bool | None = None,
     weights: jax.Array | None = None,   # (N,) per-client aggregation weights
+    mode: ProjectionMode = ProjectionMode.FULL,
+    block_weights: jax.Array | None = None,   # (k,) per-block shrinkage
 ) -> Any:
-    """Kernelized Algorithm 1 lines 7–13: x ← x + (lr/N)·Σₙ rₙ vₙ.
+    """Kernelized Algorithm 1 lines 7–13: x ← x + (lr/N)·Σₙⱼ rₙⱼ vₙⱼ.
 
     With ``weights`` (the runtime's Horvitz–Thompson × staleness
-    coefficients) the uniform 1/N mean becomes x ← x + lr·Σₙ wₙ rₙ vₙ;
-    the weights are folded into the scalars so the kernel is unchanged.
+    coefficients) the uniform 1/N mean becomes x ← x + lr·Σₙ wₙ rₙ vₙ.
+    2-D ``rs`` runs the k-block-scalar decode (block index joins the
+    kernel grid); ``block_weights`` applies the MSE-optimal per-block
+    shrinkage (DESIGN §6).  All weights are folded into the scalars so
+    the kernel is unchanged.
     """
-    rs = rs.reshape(-1).astype(jnp.float32)
-    n = rs.shape[0]
-    sj = jax.vmap(lambda s: _proj_seed(s, 0))(seeds)
+    rs = jnp.asarray(rs, jnp.float32)
+    if rs.ndim == 1:
+        rs = rs[:, None]
+    n, k = rs.shape
+    if mode == ProjectionMode.FULL and k > 1:
+        rs = rs / k        # matches reconstruct_tree's unbiased 1/m mean
+    if block_weights is not None:
+        rs = rs * jnp.asarray(block_weights, jnp.float32).reshape(1, k)
     if weights is not None:
-        rs = rs * weights.reshape(-1).astype(jnp.float32)
+        rs = rs * weights.reshape(-1, 1).astype(jnp.float32)
         scale = server_lr
     else:
         scale = server_lr / n
     leaves, treedef = jax.tree_util.tree_flatten(params)
+    total = sum(leaf.size for leaf in leaves)
+    masked = mode == ProjectionMode.BLOCK and k > 1
     out = []
+    offset = 0
     for tag, leaf in enumerate(leaves):
         x2d, block, (rows, cols) = as_blocked_2d(leaf)
+        lo, hi = leaf_block_bounds(offset, leaf.size, total, k, mode)
         y = reconstruct_kernel_call(
-            x2d, sj, rs, tag, scale, _dist_name(distribution), block,
-            interpret=interpret)
+            x2d, seeds, rs, tag, scale, _dist_name(distribution), block,
+            interpret=interpret, lo=jnp.asarray(lo, jnp.float32),
+            hi=jnp.asarray(hi, jnp.float32), orig_cols=cols, masked=masked)
         out.append(y[:rows, :cols].reshape(leaf.shape))
+        offset += leaf.size
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.fedscalar import FedScalarConfig, server_aggregate
 from repro.core.prng import Distribution
-from repro.core.projection import project_tree
+from repro.core.projection import ProjectionMode, project_tree
 from repro.kernels.common import fold_seed, hash_u32, uniform01
 from repro.kernels.qsgd_quant import _TAG_Q
 
@@ -22,14 +22,25 @@ __all__ = ["project_tree_ref", "server_update_ref", "qsgd_roundtrip_ref"]
 
 
 def project_tree_ref(delta: Any, seed,
-                     distribution: Distribution = Distribution.RADEMACHER):
-    return project_tree(delta, seed, distribution, num_projections=1)
+                     distribution: Distribution = Distribution.RADEMACHER,
+                     num_projections: int = 1,
+                     mode: ProjectionMode = ProjectionMode.FULL):
+    return project_tree(delta, seed, distribution,
+                        num_projections=num_projections, mode=mode)
 
 
 def server_update_ref(params: Any, rs, seeds, server_lr: float = 1.0,
-                      distribution: Distribution = Distribution.RADEMACHER):
-    cfg = FedScalarConfig(server_lr=server_lr, distribution=distribution)
-    return server_aggregate(params, rs.reshape(-1, 1), seeds, cfg)
+                      distribution: Distribution = Distribution.RADEMACHER,
+                      num_projections: int = 1,
+                      mode: ProjectionMode = ProjectionMode.FULL,
+                      block_weights=None):
+    cfg = FedScalarConfig(server_lr=server_lr, distribution=distribution,
+                          num_projections=num_projections, mode=mode)
+    rs = jnp.asarray(rs, jnp.float32)
+    if rs.ndim == 1:
+        rs = rs.reshape(-1, 1)
+    return server_aggregate(params, rs, seeds, cfg,
+                            block_weights=block_weights)
 
 
 def _coords_2d(shape):

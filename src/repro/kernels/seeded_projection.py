@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused seeded projection  r = ⟨x, v(ξ)⟩.
+"""Pallas TPU kernel: fused seeded projection  rⱼ = ⟨x, vⱼ(ξ)⟩, j < k.
 
 The client-side hot loop of FedScalar at large d.  A naive
 implementation streams both δ (d floats) **and** a materialized v
@@ -9,14 +9,25 @@ all VPU) and fuses generate → multiply → reduce, so HBM traffic is just
 δ itself: half the memory-bound lower bound, and v never exists as a
 tensor anywhere.
 
-Grid: 2-D over (row-blocks, col-blocks) of the operand viewed as a
-matrix (leading dims flattened to rows).  TPU grid iteration is
-sequential, so the (1,1) float32 output tile accumulates partial sums
-across grid steps (initialized at step (0,0)).
+Grid: 3-D — **block index × (row-blocks, col-blocks)** of the operand
+viewed as a matrix (leading dims flattened to rows).  The k-block-
+scalar upload (DESIGN.md §6) makes the projection ordinal a real grid
+dimension: block j uses its own per-block seed and, in BLOCK mode, a
+flat-index mask restricting it to its contiguous slice of the leaf, so
+one compiled kernel emits all k scalars of ``r ∈ ℝᵏ`` in a single
+sweep over δ.  TPU grid iteration is sequential, so each (1, 1)
+float32 output tile accumulates partial sums across its (i, j) steps.
 
 ``row_offset``/``col_offset`` shift the global coordinates so a shard
 of a model-parallel leaf projects exactly its slice — composition with
-shard_map needs no other change.
+shard_map needs no other change.  ``k=1`` lowers to exactly the
+pre-block kernel body (no mask is applied), keeping the paper path
+bit-identical.
+
+Shapes/dtypes: x2d is a block-aligned float matrix; per-block seeds are
+uint32 ``(k,)``; block bounds are leaf-local flat indices as float32
+``(k,)`` (exact below 2²⁴ elements per leaf — the jnp BLOCK path has
+the same float-mask domain); output is float32 ``(k, 1)``.
 """
 from __future__ import annotations
 
@@ -29,30 +40,111 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import fold_seed, gen_tile, interpret_mode
 
-__all__ = ["projection_kernel_call", "DEFAULT_BLOCK"]
+__all__ = ["projection_kernel_call", "projection_blocks_kernel_call",
+           "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = (256, 512)
 
 
-def _proj_kernel(seed_ref, x_ref, o_ref, *, distribution: str,
-                 block: tuple, row_offset: int, col_offset: int):
-    pi = pl.program_id(0)
-    pj = pl.program_id(1)
+def _proj_kernel(seeds_ref, lo_ref, hi_ref, x_ref, o_ref, *,
+                 distribution: str, block: tuple, masked: bool,
+                 row_offset: int, col_offset: int, orig_cols: int):
+    pb = pl.program_id(0)
+    pi = pl.program_id(1)
+    pj = pl.program_id(2)
     br, bc = block
-    seed_folded = seed_ref[0]
+    seed_folded = seeds_ref[pb]
 
     row = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 0)
            + jnp.uint32(row_offset) + pi.astype(jnp.uint32) * jnp.uint32(br))
     col = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 1)
            + jnp.uint32(col_offset) + pj.astype(jnp.uint32) * jnp.uint32(bc))
-    v = gen_tile(seed_folded, row, col, distribution)
-    part = jnp.sum(x_ref[...].astype(jnp.float32) * v)
 
     @pl.when(jnp.logical_and(pi == 0, pj == 0))
     def _init():
         o_ref[0, 0] = jnp.float32(0.0)
 
-    o_ref[0, 0] += part
+    if not masked:
+        # Paper k=1 path and FULL-mode multi-projections: every scalar
+        # spans the whole leaf — no mask multiply (bit-identical k=1,
+        # and no float32 flat-index domain limit).
+        v = gen_tile(seed_folded, row, col, distribution)
+        o_ref[0, 0] += jnp.sum(x_ref[...].astype(jnp.float32) * v)
+    else:
+        # Skip (tile, block) pairs with provably empty intersection —
+        # blocks partition the flat index space, so each tile overlaps
+        # only ~1-2 of the k blocks and the rest cost one comparison.
+        r0 = (jnp.float32(row_offset)
+              + pi.astype(jnp.float32) * jnp.float32(br))
+        tile_lo = r0 * jnp.float32(orig_cols)
+        tile_hi = (r0 + jnp.float32(br - 1) + 1.0) * jnp.float32(orig_cols)
+        overlap = jnp.logical_and(tile_lo < hi_ref[pb], tile_hi > lo_ref[pb])
+
+        @pl.when(overlap)
+        def _():
+            v = gen_tile(seed_folded, row, col, distribution)
+            flat = (row.astype(jnp.float32) * jnp.float32(orig_cols)
+                    + col.astype(jnp.float32))
+            mask = jnp.logical_and(flat >= lo_ref[pb], flat < hi_ref[pb])
+            o_ref[0, 0] += jnp.sum(
+                x_ref[...].astype(jnp.float32) * v * mask.astype(jnp.float32))
+
+
+def projection_blocks_kernel_call(
+    x2d: jax.Array,
+    seeds: jax.Array,          # (k,) per-block projection seeds (pre-leaf-fold)
+    leaf_tag: int,
+    lo: jax.Array,             # (k,) leaf-local flat lower bounds (float32)
+    hi: jax.Array,             # (k,) leaf-local flat upper bounds (float32)
+    distribution: str = "rademacher",
+    block: tuple = DEFAULT_BLOCK,
+    row_offset: int = 0,
+    col_offset: int = 0,
+    orig_cols: int | None = None,
+    interpret: bool | None = None,
+    masked: bool | None = None,
+) -> jax.Array:
+    """→ float32 ``(k,)`` block scalars ⟨x2d·𝟙[block j], vⱼ⟩.
+
+    x2d must be 2-D and block-aligned (ops.py handles padding/reshape
+    for arbitrary leaves; zero padding is exact).  Padded tail elements
+    may fall outside every block's bounds — they carry x = 0 either
+    way, so masking them in or out is exact.  ``masked=False`` (FULL
+    mode: every projection spans the whole leaf) skips the flat-index
+    mask entirely; the lo/hi bounds are then ignored.
+    """
+    rows, cols = x2d.shape
+    br, bc = block
+    assert rows % br == 0 and cols % bc == 0, (x2d.shape, block)
+    k = seeds.shape[0]
+    if masked is None:
+        masked = k > 1
+    if orig_cols is None:
+        orig_cols = cols
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if interpret:
+        interpret = interpret_mode()
+    seeds_folded = jax.vmap(lambda s: fold_seed(s, leaf_tag))(seeds)
+
+    kern = functools.partial(
+        _proj_kernel, distribution=distribution, block=block, masked=masked,
+        row_offset=row_offset, col_offset=col_offset, orig_cols=orig_cols)
+    out = pl.pallas_call(
+        kern,
+        grid=(k, rows // br, cols // bc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((br, bc), lambda b, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=interpret,
+    )(seeds_folded, jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
+      x2d)
+    return out[:, 0]
 
 
 def projection_kernel_call(
@@ -65,29 +157,10 @@ def projection_kernel_call(
     col_offset: int = 0,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """→ float32 scalar ⟨x2d, v⟩.  x2d must be 2-D and block-aligned
-    (ops.py handles padding/reshape for arbitrary leaves)."""
-    rows, cols = x2d.shape
-    br, bc = block
-    assert rows % br == 0 and cols % bc == 0, (x2d.shape, block)
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    if interpret:
-        interpret = interpret_mode()
-    seed_folded = fold_seed(seed, leaf_tag).reshape(1)
-
-    kern = functools.partial(
-        _proj_kernel, distribution=distribution, block=block,
-        row_offset=row_offset, col_offset=col_offset)
-    out = pl.pallas_call(
-        kern,
-        grid=(rows // br, cols // bc),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        interpret=interpret,
-    )(seed_folded, x2d)
-    return out[0, 0]
+    """→ float32 scalar ⟨x2d, v⟩ — the k=1 face of the block kernel."""
+    size = float(x2d.shape[0]) * float(x2d.shape[1])
+    out = projection_blocks_kernel_call(
+        x2d, jnp.asarray(seed, jnp.uint32).reshape(1), leaf_tag,
+        jnp.zeros((1,), jnp.float32), jnp.full((1,), size, jnp.float32),
+        distribution, block, row_offset, col_offset, interpret=interpret)
+    return out[0]

@@ -1,0 +1,263 @@
+"""Direction families (DESIGN §6): unbiasedness, variance models within
+5%, family ordering, the k-scalar wire codec through a lossy channel,
+MSE-optimal block weights, and the k=1 Rademacher bit-identity anchor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedscalar as fs
+from repro.core.directions import (
+    FAMILIES,
+    block_bounds,
+    block_dims,
+    get_family,
+    optimal_block_weights,
+    tree_block_sqnorms,
+)
+from repro.core.prng import Distribution
+from repro.core.projection import (
+    ProjectionMode,
+    project_tree,
+    reconstruct_tree,
+)
+from repro.fed.costmodel import ChannelConfig, CostModel, upload_bits
+from repro.fed.runtime.transport import UplinkChannel, WireFormat
+
+FAMILY_NAMES = list(FAMILIES)
+
+
+def _delta(d: int, seed: int = 0):
+    return {"w": jnp.asarray(np.random.RandomState(seed).randn(d), jnp.float32)}
+
+
+def _mc_recs(delta, fam, trials, k=1):
+    mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+
+    def one(seed):
+        r = project_tree(delta, seed, fam.distribution, k, mode)
+        return reconstruct_tree(delta, seed, r, fam.distribution, k, mode)["w"]
+
+    return jax.jit(jax.vmap(one))(jnp.arange(trials, dtype=jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_get_family_resolution():
+    fam = FAMILIES["rademacher"]
+    assert get_family("rademacher") is fam
+    assert get_family(Distribution.RADEMACHER) is fam
+    assert get_family(fam) is fam
+    with pytest.raises(ValueError, match="unknown direction family"):
+        get_family("cauchy")
+
+
+def test_block_geometry_partitions():
+    dims = block_dims(103, 8)
+    assert sum(dims) == 103 and max(dims) - min(dims) <= 1
+    covered = [block_bounds(103, 8, j) for j in range(8)]
+    assert covered[0][0] == 0 and covered[-1][1] == 103
+    for (lo_a, hi_a), (lo_b, _) in zip(covered, covered[1:]):
+        assert hi_a == lo_b  # contiguous, disjoint
+    sq = tree_block_sqnorms(_delta(103), 8)
+    assert sq.shape == (8,)
+    np.testing.assert_allclose(
+        sq.sum(), float(jnp.sum(_delta(103)["w"] ** 2)), rtol=1e-5)
+
+
+def test_block_mask_domain_guard():
+    """BLOCK mode refuses leaves beyond the exact float32 mask domain
+    (2²⁴ elements) instead of silently rounding block boundaries."""
+    huge = {"w": jax.ShapeDtypeStruct(((1 << 24) + 8,), jnp.float32)}
+    with pytest.raises(ValueError, match="block-mask domain"):
+        jax.eval_shape(
+            lambda t: project_tree(t, 0, Distribution.RADEMACHER, 4,
+                                   ProjectionMode.BLOCK), huge)
+    # FULL mode has no flat-index mask, hence no domain limit
+    jax.eval_shape(
+        lambda t: project_tree(t, 0, Distribution.RADEMACHER, 4,
+                               ProjectionMode.FULL), huge)
+
+
+def test_bits_per_upload_consistency():
+    """Family, wire format and cost model agree on the k-frame size."""
+    for k, bits in ((1, 32), (8, 16)):
+        fam_bits = FAMILIES["rademacher"].bits_per_upload(k, scalar_bits=bits)
+        assert fam_bits == upload_bits(k, scalar_bits=bits)
+        fmt = WireFormat("fp32" if bits == 32 else "fp16", k)
+        assert fmt.bits_per_upload == fam_bits
+        assert fmt.k == k
+
+
+# ---------------------------------------------------------------------------
+# statistical contracts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILY_NAMES)
+def test_family_unbiasedness(name):
+    """E[⟨v,δ⟩v] = δ for every registered family."""
+    delta = _delta(64)
+    recs = _mc_recs(delta, get_family(name), trials=4096)
+    est = jnp.mean(recs, axis=0)
+    rel = float(jnp.linalg.norm(est - delta["w"])
+                / jnp.linalg.norm(delta["w"]))
+    # MC error ~ sqrt(d/n) ≈ 0.125; 3-sigma-ish headroom
+    assert rel < 0.3, (name, rel)
+
+
+@pytest.mark.parametrize("name", FAMILY_NAMES)
+@pytest.mark.parametrize("k", [1, 4])
+def test_variance_model_within_5pct(name, k):
+    """Measured estimator variance matches (dⱼ−2+κ)‖δⱼ‖² within 5%.
+
+    The tier-1 acceptance contract of the pluggable-family refactor:
+    the family's closed-form model is predictive, per family and per k.
+    """
+    fam = get_family(name)
+    delta = _delta(48, seed=1)
+    recs = _mc_recs(delta, fam, trials=40960, k=k)
+    measured = float(jnp.sum(jnp.var(recs, axis=0)))
+    predicted = fam.predicted_variance(
+        48, k, block_sqnorms=tree_block_sqnorms(delta, k))
+    assert abs(measured / predicted - 1.0) < 0.05, (name, k, measured, predicted)
+
+
+def test_rademacher_vs_gaussian_variance_ordering():
+    """Thm 2 generalized: measured var orders rademacher < gaussian < sparse
+    with the predicted κ-gaps (κ = 1, 3, s)."""
+    d, trials = 16, 40960
+    delta = _delta(d, seed=2)
+    meas = {
+        name: float(jnp.sum(jnp.var(
+            _mc_recs(delta, get_family(name), trials), axis=0)))
+        for name in ("rademacher", "gaussian", "sparse_rademacher", "hadamard")
+    }
+    assert meas["rademacher"] < meas["gaussian"] < meas["sparse_rademacher"]
+    # the Walsh family rides the Rademacher (κ=1) curve
+    assert abs(meas["hadamard"] / meas["rademacher"] - 1.0) < 0.1, meas
+
+
+# ---------------------------------------------------------------------------
+# k-scalar codec through a lossy channel
+# ---------------------------------------------------------------------------
+
+
+def test_k_scalar_codec_roundtrip_lossy_channel():
+    """(C, k) frames survive serialize → lossy air → decode, at both widths."""
+    rng = np.random.RandomState(0)
+    c, k = 16, 8
+    rs = rng.randn(c, k).astype(np.float32)
+    seeds = rng.randint(0, 2**32, size=c, dtype=np.uint64).astype(np.uint32)
+    cm = CostModel(ChannelConfig(drop_prob=0.3), fedavg_bits_per_client=1000,
+                   rng_seed=3)
+
+    fmt32 = WireFormat("fp32", k)
+    tx = UplinkChannel(cm, fmt32).transmit(rs, seeds)
+    assert tx.r_hat.shape == (c, k) and tx.seeds.shape == (c,)
+    np.testing.assert_array_equal(tx.r_hat, rs)       # fp32 is byte-exact
+    np.testing.assert_array_equal(tx.seeds, seeds)
+    assert tx.payload_bytes == c * (4 * k + 4)
+    assert 0 < tx.lost.sum() < c                      # lossy but not dead
+
+    fmt16 = WireFormat("fp16", k)
+    tx16 = UplinkChannel(cm, fmt16).transmit(rs, seeds)
+    assert tx16.payload_bytes == c * (2 * k + 4)
+    np.testing.assert_array_equal(tx16.seeds, seeds)  # seed stays u32-exact
+    err = np.abs(tx16.r_hat - rs)
+    assert err.max() > 0                              # honestly lossy
+    assert err.max() < 1e-2 * np.abs(rs).max() + 1e-3  # fp16 rel err ~2⁻¹¹
+
+
+# ---------------------------------------------------------------------------
+# MSE-optimal per-block aggregation weights
+# ---------------------------------------------------------------------------
+
+
+def test_optimal_block_weights_reduce_mse():
+    """Wiener per-block shrinkage beats the unbiased mean in MSE."""
+    d, k, n_clients, trials = 32, 4, 5, 2048
+    fam = get_family("rademacher")
+    rng = np.random.RandomState(4)
+    deltas = [{"w": jnp.asarray(rng.randn(d), jnp.float32)}
+              for _ in range(n_clients)]
+    gbar = np.mean([np.asarray(dl["w"]) for dl in deltas], axis=0)
+    cw = optimal_block_weights(
+        fam, d, k,
+        mean_block_sqnorms=tree_block_sqnorms({"w": jnp.asarray(gbar)}, k),
+        client_block_sqnorm_sums=np.sum(
+            [tree_block_sqnorms(dl, k) for dl in deltas], axis=0),
+        num_clients=n_clients)
+    assert np.all((cw > 0) & (cw <= 1))
+
+    def agg(t, bw):
+        acc = jnp.zeros(d)
+        for n, dl in enumerate(deltas):
+            seed = t * jnp.uint32(131) + jnp.uint32(n)
+            r = project_tree(dl, seed, fam.distribution, k,
+                             ProjectionMode.BLOCK)
+            acc = acc + reconstruct_tree(
+                dl, seed, r, fam.distribution, k, ProjectionMode.BLOCK,
+                block_weights=bw)["w"]
+        return acc / n_clients
+
+    ts = jnp.arange(trials, dtype=jnp.uint32)
+    plain = jax.jit(jax.vmap(lambda t: agg(t, None)))(ts)
+    shrunk = jax.jit(jax.vmap(lambda t: agg(t, jnp.asarray(cw, jnp.float32))))(ts)
+    mse_plain = float(jnp.mean(jnp.sum((plain - gbar) ** 2, axis=1)))
+    mse_shrunk = float(jnp.mean(jnp.sum((shrunk - gbar) ** 2, axis=1)))
+    assert mse_shrunk < mse_plain, (mse_shrunk, mse_plain)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity anchor: k=1 Rademacher ≡ the paper path
+# ---------------------------------------------------------------------------
+
+
+def test_k1_rademacher_config_is_paper_config():
+    assert fs.config_for_family("rademacher", 1) == fs.FedScalarConfig()
+    cfg = fs.config_for_family("sparse_rademacher", 8)
+    assert cfg.num_projections == 8 and cfg.mode == ProjectionMode.BLOCK
+    assert fs.family_of(cfg).name == "sparse_rademacher"
+
+
+def test_k1_rademacher_rounds_bit_identical():
+    """3 protocol rounds through the family surface ≡ the legacy path,
+    bit for bit (the refactor-safety anchor of DESIGN §6)."""
+    rng = np.random.RandomState(5)
+    params = {"w": jnp.asarray(rng.randn(10, 4), jnp.float32),
+              "b": jnp.asarray(rng.randn(4), jnp.float32)}
+    batches = (jnp.asarray(rng.randn(6, 5, 8, 10), jnp.float32),
+               jnp.asarray(rng.randn(6, 5, 8, 4), jnp.float32))
+
+    def grad_fn(p, batch):
+        x, y = batch
+        return jax.grad(
+            lambda pp: jnp.mean((x @ pp["w"] + pp["b"] - y) ** 2))(p)
+
+    legacy = fs.FedScalarConfig(distribution=Distribution.RADEMACHER,
+                                num_projections=1, mode=ProjectionMode.FULL)
+    fam = fs.config_for_family("rademacher", 1)
+    p_a, p_b = params, params
+    for k in range(3):
+        p_a, _ = fs.fedscalar_round(p_a, batches, k, grad_fn, legacy)
+        p_b, _ = fs.fedscalar_round(p_b, batches, k, grad_fn, fam)
+    for a, b in zip(jax.tree_util.tree_leaves(p_a),
+                    jax.tree_util.tree_leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_predicted_estimator_variance_helper():
+    params = _delta(60)
+    cfg = fs.config_for_family("gaussian", 4)
+    pred = fs.predicted_estimator_variance(cfg, params, total_sqnorm=2.0)
+    fam = get_family("gaussian")
+    assert pred == pytest.approx(fam.predicted_variance(60, 4, total_sqnorm=2.0))
+    # FULL-mode m projections divide the single-block variance by m
+    cfg_full = fs.FedScalarConfig(num_projections=4)
+    pred_full = fs.predicted_estimator_variance(cfg_full, params)
+    assert pred_full == pytest.approx(
+        get_family("rademacher").predicted_variance(60, 1) / 4)
