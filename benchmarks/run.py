@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         derived = measured/predicted variance + bytes)
   kernel_*            — Pallas kernel per-call latency (interpret mode on
                         CPU — structural check, not TPU timing)
+  sharded_recon_*     — mesh-sharded server reconstruction throughput vs
+                        device count (DESIGN §7; derived = elements/s)
   roofline_*          — dry-run sweep summary
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--rounds 300]``
@@ -260,6 +262,64 @@ def bench_runtime_throughput():
 
 
 # ---------------------------------------------------------------------------
+# mesh-sharded server: reconstruction throughput vs device count
+# ---------------------------------------------------------------------------
+
+def bench_sharded_throughput():
+    """Sharded server apply: elements/s reconstructed vs mesh devices.
+
+    Sweeps mesh size (1/2/4/8 devices, capped at what the backend
+    exposes — run under ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8`` to see the full curve on CPU) × model dimension d
+    × cohort size N, timing the **resident** shard_map decode of
+    ``repro.sharding.fed_rules`` — the model stays sharded across
+    rounds (``shard_tree`` + ``sharded_apply_blocks``), so the loop
+    measures reconstruction, not host↔mesh parameter transfer (jnp
+    local body — on CPU the numbers are a scaling-shape check, not TPU
+    timing).  Rows land in ``experiments/sharding/throughput.csv`` for
+    report §Sharding.
+    """
+    import os
+
+    from repro.core import fedscalar as fs
+    from repro.core.compat import make_mesh
+    from repro.sharding import fed_rules as fr
+
+    n_dev = len(jax.devices())
+    shard_counts = [s for s in (1, 2, 4, 8) if s <= n_dev]
+    rows = []
+    for d in (1 << 18, 1 << 20):
+        rows_2d = 512
+        params = {"w": jnp.asarray(
+            np.random.RandomState(0).randn(rows_2d, d // rows_2d), jnp.float32)}
+        for cohort in (64, 256):
+            seeds = fs.round_seeds(0, cohort)
+            rs = jnp.asarray(np.random.RandomState(1).randn(cohort, 1),
+                             jnp.float32)
+            for s in shard_counts:
+                mesh = make_mesh((1, s), ("data", "model"))
+                plan = fr.plan_tree(params, s)
+                blocks = fr.shard_tree(params, plan, mesh)
+
+                @jax.jit
+                def apply(b, r, sd, mesh=mesh, plan=plan):
+                    return fr.sharded_apply_blocks(
+                        mesh, plan, b, r, sd, use_kernel=False)
+
+                us, _ = timed(lambda: apply(blocks, rs, seeds)[0], repeat=1)
+                eps = d * cohort / (us / 1e6)    # regenerated elements/s
+                emit(f"sharded_recon_d{d}_n{cohort}_dev{s}", us,
+                     f"{eps:.3g}_elems/s")
+                rows.append((d, cohort, s, us, eps))
+
+    os.makedirs("experiments/sharding", exist_ok=True)
+    with open("experiments/sharding/throughput.csv", "w") as f:
+        f.write("d,cohort,devices,us_per_apply,elements_per_s\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]},{r[2]},{r[3]:.1f},{r[4]:.4g}\n")
+
+
+# ---------------------------------------------------------------------------
 # roofline / dry-run summary
 # ---------------------------------------------------------------------------
 
@@ -294,6 +354,7 @@ def main() -> None:
     bench_direction_sweep()
     bench_kernels()
     bench_runtime_throughput()
+    bench_sharded_throughput()
     bench_roofline()
     print(f"# {len(ROWS)} benchmark rows", flush=True)
 

@@ -49,11 +49,29 @@ __all__ = [
     "DirectionFamily",
     "FAMILIES",
     "get_family",
+    "MAX_MASKED_LEAF",
+    "check_block_mask_domain",
     "block_bounds",
     "block_dims",
     "tree_block_sqnorms",
     "optimal_block_weights",
 ]
+
+# float32 flat-index block masks are exact only below 2**24 elements per
+# leaf.  Single source of truth for every consumer of the k-block
+# partition (jnp BLOCK path, Pallas kernels via repro.kernels.ops, the
+# mesh-sharded server) — a drifted copy would silently migrate boundary
+# elements between blocks after float32 rounding.
+MAX_MASKED_LEAF = 1 << 24
+
+
+def check_block_mask_domain(leaf_size: int) -> None:
+    """BLOCK-mode guard: loud failure instead of silently-rounded bounds."""
+    if leaf_size > MAX_MASKED_LEAF:
+        raise ValueError(
+            f"leaf of {leaf_size} elements exceeds the exact float32 "
+            f"block-mask domain (2**24); use fewer/larger blocks or "
+            f"split the leaf")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -54,6 +54,7 @@ __all__ = [
     "make_local_sgd",
     "client_stage",
     "server_aggregate",
+    "server_aggregate_mesh",
     "fedscalar_round",
     "round_seeds",
     "round_seeds_for",
@@ -249,6 +250,32 @@ def server_aggregate(
     return jax.tree_util.tree_map(
         lambda p, g: (p + cfg.server_lr * g).astype(p.dtype), params, ghat
     )
+
+
+def server_aggregate_mesh(
+    params: Any,
+    rs: jax.Array,       # (N, num_projections)
+    seeds: jax.Array,    # (N,)
+    cfg: FedScalarConfig,
+    mesh,
+    weights: jax.Array | None = None,
+    block_weights: jax.Array | None = None,
+    use_kernel: bool | None = None,
+) -> Any:
+    """Mesh-sharded lines 7–13: each device rebuilds its own d-shard.
+
+    Semantically ≡ :func:`server_aggregate` / the kernel path, but the
+    flat parameter vector is partitioned across ``mesh`` and every
+    device regenerates only its (offset, length) slice of the direction
+    chain — zero cross-device communication (DESIGN §7).  Delegates to
+    :func:`repro.sharding.fed_rules.sharded_server_update`.
+    """
+    from repro.sharding.fed_rules import sharded_server_update
+
+    return sharded_server_update(
+        mesh, params, rs, seeds, server_lr=cfg.server_lr,
+        distribution=cfg.distribution, weights=weights, mode=cfg.mode,
+        block_weights=block_weights, use_kernel=use_kernel)
 
 
 def fedscalar_round(

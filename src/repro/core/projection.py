@@ -37,6 +37,7 @@ float32, cast to each leaf's dtype); seeds are uint32 scalars.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from typing import Any, Sequence
 
@@ -53,6 +54,8 @@ from repro.core.prng import (
 
 __all__ = [
     "ProjectionMode",
+    "LeafLayout",
+    "leaf_layout",
     "tree_size",
     "project_tree",
     "reconstruct_tree",
@@ -69,6 +72,61 @@ def tree_size(tree: Any) -> int:
     return sum(leaf.size for leaf in jax.tree_util.tree_leaves(tree))
 
 
+@dataclasses.dataclass(frozen=True)
+class LeafLayout:
+    """Where one leaf sits in the global flattened parameter vector.
+
+    The direction chain addresses every element by ``(leaf_tag, row,
+    col)`` over the leaf's 2-D view (leading dims × last dim), while the
+    k-block partition and the mesh shard plan live in **global flat**
+    coordinates.  This record is the offset-aware bridge between the
+    two: every consumer (jnp path, Pallas kernels via
+    :mod:`repro.kernels.ops`, the mesh-sharded server of
+    :mod:`repro.sharding.fed_rules`) flattens/unflattens through the
+    same (offset, rows, cols) triple, so they agree on which global
+    index — and hence which block scalar and which shard — owns every
+    weight.
+    """
+
+    tag: int            # leaf ordinal in tree_leaves order
+    shape: tuple        # original leaf shape
+    rows: int           # 2-D view rows (product of leading dims)
+    cols: int           # 2-D view cols (last dim; 1-D leaves are a row)
+    offset: int         # global flat offset of the leaf's first element
+    size: int           # rows * cols == leaf.size
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.size
+
+
+def _view2d(shape: tuple) -> tuple[int, int]:
+    if len(shape) == 0:
+        return 1, 1
+    if len(shape) == 1:
+        return 1, int(shape[0])
+    rows = 1
+    for s in shape[:-1]:
+        rows *= int(s)
+    return rows, int(shape[-1])
+
+
+def leaf_layout(tree: Any) -> tuple[LeafLayout, ...]:
+    """→ per-leaf :class:`LeafLayout` in deterministic tree_leaves order.
+
+    Accepts arrays or ``ShapeDtypeStruct``s (anything with ``.shape``).
+    """
+    out = []
+    offset = 0
+    for tag, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+        rows, cols = _view2d(tuple(leaf.shape))
+        size = rows * cols
+        out.append(LeafLayout(tag=tag, shape=tuple(leaf.shape), rows=rows,
+                              cols=cols, offset=offset, size=size))
+        offset += size
+    return tuple(out)
+
+
 def _leaves(tree: Any):
     """Leaves in deterministic order with stable ordinal tags."""
     leaves = jax.tree_util.tree_leaves(tree)
@@ -80,25 +138,18 @@ def _proj_seed(seed, j: int):
     return splitmix32(jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(0xA511E9B3 + j))
 
 
-# float32 flat-index masks are exact only below 2**24 elements per leaf
-# (same domain as the kernels' repro.kernels.ops.leaf_block_bounds).
-_MAX_MASKED_LEAF = 1 << 24
-
-
 def _check_block_mask_domain(leaves) -> None:
-    """BLOCK mode guard: loud failure instead of silently-rounded bounds.
+    """BLOCK mode guard — single source: repro.core.directions.
 
     Without it, boundary elements of huge leaves would migrate between
     blocks after float32 rounding — self-consistent but drifted from the
     exact integer partition the variance models and
     :func:`repro.core.directions.optimal_block_weights` assume.
     """
+    from repro.core.directions import check_block_mask_domain
+
     for _, leaf in leaves:
-        if leaf.size > _MAX_MASKED_LEAF:
-            raise ValueError(
-                f"leaf of {leaf.size} elements exceeds the exact float32 "
-                f"block-mask domain (2**24); use fewer/larger blocks or "
-                f"split the leaf")
+        check_block_mask_domain(leaf.size)
 
 
 def _block_bounds(total: int, m: int, j: int) -> tuple[int, int]:

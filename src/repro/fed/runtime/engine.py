@@ -12,9 +12,11 @@ Per round the engine
      the lossy/laggy channel (``transport``),
   5. lets the streaming aggregator close the round at the deadline
      (``server``) and applies  x ← x + lr·Σᵢⱼ coeffᵢ·rᵢⱼ·vⱼ(ξᵢ)  — via
-     the fori-loop path or, for large cohorts, the fused Pallas
-     reconstruction kernel with its client-chunk **and block** grid
-     dimensions (DESIGN §2/§6),
+     the fori-loop path, the fused Pallas reconstruction kernel with
+     its client-chunk **and block** grid dimensions (DESIGN §2/§6),
+     or — with ``mesh_shape`` set — the mesh-sharded apply where every
+     device of a (data, model) mesh rebuilds its own slice of the
+     direction chain with zero collectives (DESIGN §7),
   6. charges the round to the bandwidth/energy cost model (bytes and
      energy scale with k, the scalars-per-upload dial).
 
@@ -79,6 +81,9 @@ class RuntimeConfig:
     client_chunk: int = 256             # cohort members per vmapped compute chunk
     kernel_cohort_threshold: int | None = None  # cohorts ≥ this → Pallas path
                                                 # (None: TPU only, CPU never)
+    mesh_shape: tuple | None = None     # (data, model) device mesh for the
+                                        # sharded server apply (DESIGN §7);
+                                        # None = single-device apply
     server: ServerConfig = dataclasses.field(default_factory=ServerConfig)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
 
@@ -112,6 +117,7 @@ def _is_fused_equivalent(cfg: RuntimeConfig, num_shards: int) -> bool:
     return (
         cfg.participation == 1.0
         and cfg.sampler in ("uniform", "weighted")
+        and cfg.mesh_shape is None     # sharded apply never takes the shortcut
         and cfg.population == num_shards
         and not math.isfinite(cfg.server.deadline_s)   # deadline = ∞
         and cfg.server.max_staleness == 0
@@ -229,6 +235,31 @@ def run_federation(
     if kern_thresh is None:
         kern_thresh = 512 if jax.default_backend() == "tpu" else None
 
+    # --- mesh-sharded apply (DESIGN §7): each device rebuilds its d-shard ---
+    mesh = None
+    shard_info = None
+    if cfg.mesh_shape is not None:
+        from repro.launch.mesh import make_fed_mesh
+        from repro.sharding.fed_rules import num_mesh_shards, plan_tree
+
+        mesh = make_fed_mesh(tuple(cfg.mesh_shape))
+        plan = plan_tree(init_params, num_mesh_shards(mesh))
+        shard_info = dict(
+            mesh_shape=tuple(cfg.mesh_shape),
+            devices=num_mesh_shards(mesh),
+            per_device_elements=plan.per_shard_elements(),
+            balance=plan.balance(),
+        )
+
+        # Params stay replicated here (the client chunks and eval read the
+        # full model every round), so each apply shards/unshards the views;
+        # a decode-only server holding x resident uses
+        # fed_rules.sharded_apply_blocks and skips that round-trip.
+        @jax.jit
+        def apply_mesh(params, rs, seeds, weights):
+            return fs.server_aggregate_mesh(
+                params, rs, seeds, pcfg, mesh, weights=weights)
+
     @jax.jit
     def evaluate(params):
         return loss_fn(params, (xt, yt)), acc_fn(params, xt, yt)
@@ -238,7 +269,8 @@ def run_federation(
     hist = {k: np.zeros(K) for k in (
         "loss", "accuracy", "cum_bits", "cum_downlink_bits", "cum_wall_s",
         "cum_energy_j", "cohort_size", "applied", "applied_stale",
-        "lost_channel", "dropped_deadline", "dropped_stale", "weight_sum")}
+        "lost_channel", "dropped_deadline", "dropped_stale", "weight_sum",
+        "apply_s")}
     hist["loss"][:] = np.nan
     hist["accuracy"][:] = np.nan
     deadline = cfg.server.deadline_s
@@ -286,9 +318,15 @@ def run_federation(
             use_kernel = (kern_thresh is not None and a >= kern_thresh
                           and (cfg.num_projections == 1
                                or cfg.projection_mode == "block"))
-            applier = apply_kernel if use_kernel else apply_fori
+            if mesh is not None:
+                applier = apply_mesh
+            else:
+                applier = apply_kernel if use_kernel else apply_fori
+            t_apply = time.time()
             params = applier(params, jnp.asarray(rs_b), jnp.asarray(seeds_b),
                              jnp.asarray(w_b))
+            jax.block_until_ready(jax.tree_util.tree_leaves(params))
+            hist["apply_s"][k] = time.time() - t_apply
 
         # --- cost accounting ---
         # Sync mode: the round lasts until the deadline cuts the slowest
@@ -324,6 +362,12 @@ def run_federation(
     for key in ("cum_bits", "cum_downlink_bits", "cum_wall_s", "cum_energy_j"):
         hist[key] = np.cumsum(hist[key])
 
+    applied_rounds = hist["apply_s"] > 0
+    recon_clients_per_s = (
+        float(np.sum(hist["applied"][applied_rounds])
+              / np.sum(hist["apply_s"][applied_rounds]))
+        if applied_rounds.any() else 0.0)
+
     return dict(
         method=f"runtime_{cfg.sampler}",
         round=np.arange(1, K + 1),
@@ -333,6 +377,8 @@ def run_federation(
         fused_path=False,
         pending_rounds=agg.pending_rounds(),
         sampling_diagnostic=sampling_diagnostic(sampler, rounds=min(200, 4 * K)),
+        sharding=shard_info,
+        recon_clients_per_s=recon_clients_per_s,
         **hist,
     )
 
@@ -381,9 +427,12 @@ def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
         dropped_deadline=np.zeros(K),
         dropped_stale=np.zeros(K),
         weight_sum=np.ones(K),
+        apply_s=np.zeros(K),
         bits_per_client_per_round=fmt.bits_per_upload,
         fused_path=True,
         pending_rounds=[],
+        sharding=None,
+        recon_clients_per_s=0.0,
         sampling_diagnostic=dict(empirical_marginal_abs_err=0.0,
                                  estimate_rel_err=0.0),
     )

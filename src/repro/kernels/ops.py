@@ -30,9 +30,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.directions import block_bounds
+from repro.core.directions import block_bounds, check_block_mask_domain
 from repro.core.prng import Distribution
-from repro.core.projection import ProjectionMode, _proj_seed
+from repro.core.projection import ProjectionMode, _proj_seed, leaf_layout
 from repro.kernels.qsgd_quant import qsgd_kernel_call
 from repro.kernels.seeded_projection import projection_blocks_kernel_call
 from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
@@ -40,15 +40,11 @@ from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
 __all__ = [
     "as_blocked_2d",
     "leaf_block_bounds",
+    "fold_upload_weights",
     "project_tree_kernel",
     "server_update_kernel",
     "qsgd_roundtrip_kernel",
 ]
-
-# float32 flat-index masks (shared with the jnp BLOCK path) are exact
-# only below 2**24 elements per leaf.
-_MAX_MASKED_LEAF = 1 << 24
-
 
 def _pick_block(rows: int, cols: int) -> tuple:
     br = min(256, -(-rows // 8) * 8)
@@ -88,11 +84,7 @@ def leaf_block_bounds(
     """
     if mode != ProjectionMode.BLOCK or num_blocks == 1:
         return [0.0] * num_blocks, [float(leaf_size)] * num_blocks
-    if leaf_size > _MAX_MASKED_LEAF:
-        raise ValueError(
-            f"leaf of {leaf_size} elements exceeds the exact float32 "
-            f"block-mask domain (2**24); use fewer/larger blocks or split "
-            f"the leaf")
+    check_block_mask_domain(leaf_size)
     los, his = [], []
     for j in range(num_blocks):
         blo, bhi = block_bounds(total, num_blocks, j)
@@ -101,6 +93,38 @@ def leaf_block_bounds(
         los.append(float(lo))
         his.append(float(max(hi, lo)))
     return los, his
+
+
+def fold_upload_weights(
+    rs: jax.Array,
+    server_lr: float,
+    weights: jax.Array | None,
+    mode: ProjectionMode,
+    block_weights: jax.Array | None,
+) -> tuple[jax.Array, jax.Array | float]:
+    """Fold every aggregation coefficient into the scalars → ``(rs, scale)``.
+
+    The decode step is then always the bare ``x + scale·Σₙⱼ rₙⱼ vₙⱼ``:
+    FULL-mode 1/m averaging, per-block shrinkage, per-client
+    Horvitz–Thompson weights, and the uniform 1/N mean all pre-multiply
+    the ``(N, k)`` scalar matrix.  Shared by the single-device kernel
+    path and the mesh-sharded server (:mod:`repro.sharding.fed_rules`),
+    so both apply bit-identical coefficients.
+    """
+    rs = jnp.asarray(rs, jnp.float32)
+    if rs.ndim == 1:
+        rs = rs[:, None]
+    n, k = rs.shape
+    if mode == ProjectionMode.FULL and k > 1:
+        rs = rs / k        # matches reconstruct_tree's unbiased 1/m mean
+    if block_weights is not None:
+        rs = rs * jnp.asarray(block_weights, jnp.float32).reshape(1, k)
+    if weights is not None:
+        rs = rs * weights.reshape(-1, 1).astype(jnp.float32)
+        scale = server_lr
+    else:
+        scale = server_lr / n
+    return rs, scale
 
 
 def project_tree_kernel(
@@ -118,18 +142,17 @@ def project_tree_kernel(
     """
     seeds = jnp.stack([_proj_seed(seed, j) for j in range(num_blocks)])
     leaves = jax.tree_util.tree_leaves(delta)
-    total = sum(leaf.size for leaf in leaves)
+    layout = leaf_layout(delta)
+    total = layout[-1].end if layout else 0
     masked = mode == ProjectionMode.BLOCK and num_blocks > 1
     acc = jnp.zeros((num_blocks,), jnp.float32)
-    offset = 0
-    for tag, leaf in enumerate(leaves):
+    for ll, leaf in zip(layout, leaves):
         x2d, block, (rows, cols) = as_blocked_2d(leaf)
-        lo, hi = leaf_block_bounds(offset, leaf.size, total, num_blocks, mode)
+        lo, hi = leaf_block_bounds(ll.offset, ll.size, total, num_blocks, mode)
         acc = acc + projection_blocks_kernel_call(
-            x2d, seeds, tag, jnp.asarray(lo, jnp.float32),
+            x2d, seeds, ll.tag, jnp.asarray(lo, jnp.float32),
             jnp.asarray(hi, jnp.float32), _dist_name(distribution), block,
             orig_cols=cols, interpret=interpret, masked=masked)
-        offset += leaf.size
     return acc
 
 
@@ -153,33 +176,21 @@ def server_update_kernel(
     shrinkage (DESIGN §6).  All weights are folded into the scalars so
     the kernel is unchanged.
     """
-    rs = jnp.asarray(rs, jnp.float32)
-    if rs.ndim == 1:
-        rs = rs[:, None]
-    n, k = rs.shape
-    if mode == ProjectionMode.FULL and k > 1:
-        rs = rs / k        # matches reconstruct_tree's unbiased 1/m mean
-    if block_weights is not None:
-        rs = rs * jnp.asarray(block_weights, jnp.float32).reshape(1, k)
-    if weights is not None:
-        rs = rs * weights.reshape(-1, 1).astype(jnp.float32)
-        scale = server_lr
-    else:
-        scale = server_lr / n
+    rs, scale = fold_upload_weights(rs, server_lr, weights, mode, block_weights)
+    k = rs.shape[1]
     leaves, treedef = jax.tree_util.tree_flatten(params)
-    total = sum(leaf.size for leaf in leaves)
+    layout = leaf_layout(params)
+    total = layout[-1].end if layout else 0
     masked = mode == ProjectionMode.BLOCK and k > 1
     out = []
-    offset = 0
-    for tag, leaf in enumerate(leaves):
+    for ll, leaf in zip(layout, leaves):
         x2d, block, (rows, cols) = as_blocked_2d(leaf)
-        lo, hi = leaf_block_bounds(offset, leaf.size, total, k, mode)
+        lo, hi = leaf_block_bounds(ll.offset, ll.size, total, k, mode)
         y = reconstruct_kernel_call(
-            x2d, seeds, rs, tag, scale, _dist_name(distribution), block,
+            x2d, seeds, rs, ll.tag, scale, _dist_name(distribution), block,
             interpret=interpret, lo=jnp.asarray(lo, jnp.float32),
             hi=jnp.asarray(hi, jnp.float32), orig_cols=cols, masked=masked)
         out.append(y[:rows, :cols].reshape(leaf.shape))
-        offset += leaf.size
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -20,9 +20,12 @@ float32 output tile accumulates partial sums across its (i, j) steps.
 
 ``row_offset``/``col_offset`` shift the global coordinates so a shard
 of a model-parallel leaf projects exactly its slice — composition with
-shard_map needs no other change.  ``k=1`` lowers to exactly the
-pre-block kernel body (no mask is applied), keeping the paper path
-bit-identical.
+shard_map needs no other change.  They are **runtime** scalars (read
+from SMEM, not baked into the grid), so a single compiled kernel serves
+every shard of a mesh: inside ``shard_map`` the offset is derived from
+``jax.lax.axis_index`` and per-block seeds stay identical under any
+shard layout.  ``k=1`` lowers to exactly the pre-block kernel body (no
+mask is applied), keeping the paper path bit-identical.
 
 Shapes/dtypes: x2d is a block-aligned float matrix; per-block seeds are
 uint32 ``(k,)``; block bounds are leaf-local flat indices as float32
@@ -46,19 +49,21 @@ __all__ = ["projection_kernel_call", "projection_blocks_kernel_call",
 DEFAULT_BLOCK = (256, 512)
 
 
-def _proj_kernel(seeds_ref, lo_ref, hi_ref, x_ref, o_ref, *,
+def _proj_kernel(seeds_ref, lo_ref, hi_ref, offs_ref, x_ref, o_ref, *,
                  distribution: str, block: tuple, masked: bool,
-                 row_offset: int, col_offset: int, orig_cols: int):
+                 orig_cols: int):
     pb = pl.program_id(0)
     pi = pl.program_id(1)
     pj = pl.program_id(2)
     br, bc = block
     seed_folded = seeds_ref[pb]
+    row_offset = offs_ref[0]
+    col_offset = offs_ref[1]
 
     row = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 0)
-           + jnp.uint32(row_offset) + pi.astype(jnp.uint32) * jnp.uint32(br))
+           + row_offset + pi.astype(jnp.uint32) * jnp.uint32(br))
     col = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 1)
-           + jnp.uint32(col_offset) + pj.astype(jnp.uint32) * jnp.uint32(bc))
+           + col_offset + pj.astype(jnp.uint32) * jnp.uint32(bc))
 
     @pl.when(jnp.logical_and(pi == 0, pj == 0))
     def _init():
@@ -74,7 +79,7 @@ def _proj_kernel(seeds_ref, lo_ref, hi_ref, x_ref, o_ref, *,
         # Skip (tile, block) pairs with provably empty intersection —
         # blocks partition the flat index space, so each tile overlaps
         # only ~1-2 of the k blocks and the rest cost one comparison.
-        r0 = (jnp.float32(row_offset)
+        r0 = (row_offset.astype(jnp.float32)
               + pi.astype(jnp.float32) * jnp.float32(br))
         tile_lo = r0 * jnp.float32(orig_cols)
         tile_hi = (r0 + jnp.float32(br - 1) + 1.0) * jnp.float32(orig_cols)
@@ -98,8 +103,8 @@ def projection_blocks_kernel_call(
     hi: jax.Array,             # (k,) leaf-local flat upper bounds (float32)
     distribution: str = "rademacher",
     block: tuple = DEFAULT_BLOCK,
-    row_offset: int = 0,
-    col_offset: int = 0,
+    row_offset=0,
+    col_offset=0,
     orig_cols: int | None = None,
     interpret: bool | None = None,
     masked: bool | None = None,
@@ -112,6 +117,8 @@ def projection_blocks_kernel_call(
     way, so masking them in or out is exact.  ``masked=False`` (FULL
     mode: every projection spans the whole leaf) skips the flat-index
     mask entirely; the lo/hi bounds are then ignored.
+    ``row_offset``/``col_offset`` may be Python ints or traced uint32
+    scalars (the shard_map path passes ``axis_index``-derived offsets).
     """
     rows, cols = x2d.shape
     br, bc = block
@@ -126,14 +133,17 @@ def projection_blocks_kernel_call(
     if interpret:
         interpret = interpret_mode()
     seeds_folded = jax.vmap(lambda s: fold_seed(s, leaf_tag))(seeds)
+    offs = jnp.stack([jnp.asarray(row_offset, jnp.uint32),
+                      jnp.asarray(col_offset, jnp.uint32)])
 
     kern = functools.partial(
         _proj_kernel, distribution=distribution, block=block, masked=masked,
-        row_offset=row_offset, col_offset=col_offset, orig_cols=orig_cols)
+        orig_cols=orig_cols)
     out = pl.pallas_call(
         kern,
         grid=(k, rows // br, cols // bc),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -143,7 +153,7 @@ def projection_blocks_kernel_call(
         out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
         interpret=interpret,
     )(seeds_folded, jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
-      x2d)
+      offs, x2d)
     return out[:, 0]
 
 
@@ -153,8 +163,8 @@ def projection_kernel_call(
     leaf_tag: int,
     distribution: str = "rademacher",
     block: tuple = DEFAULT_BLOCK,
-    row_offset: int = 0,
-    col_offset: int = 0,
+    row_offset=0,
+    col_offset=0,
     interpret: bool | None = None,
 ) -> jax.Array:
     """→ float32 scalar ⟨x2d, v⟩ — the k=1 face of the block kernel."""

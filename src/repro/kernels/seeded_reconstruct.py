@@ -56,19 +56,21 @@ CLIENT_CHUNK = 32     # cohort members regenerated per grid step
 _PROJ_SALT = 0xA511E9B3
 
 
-def _rec_kernel(seeds_ref, rs_ref, scale_ref, lo_ref, hi_ref, x_ref, o_ref,
-                acc_ref, *, distribution: str, chunk: int, num_chunks: int,
-                num_blocks: int, masked: bool, block: tuple, leaf_tag: int,
-                row_offset: int, col_offset: int, orig_cols: int):
+def _rec_kernel(seeds_ref, rs_ref, scale_ref, lo_ref, hi_ref, offs_ref, x_ref,
+                o_ref, acc_ref, *, distribution: str, chunk: int,
+                num_chunks: int, num_blocks: int, masked: bool, block: tuple,
+                leaf_tag: int, orig_cols: int):
     pi = pl.program_id(0)
     pj = pl.program_id(1)
     pb = pl.program_id(2)
     pc = pl.program_id(3)
     br, bc = block
+    row_offset = offs_ref[0]
+    col_offset = offs_ref[1]
     row = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 0)
-           + jnp.uint32(row_offset) + pi.astype(jnp.uint32) * jnp.uint32(br))
+           + row_offset + pi.astype(jnp.uint32) * jnp.uint32(br))
     col = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 1)
-           + jnp.uint32(col_offset) + pj.astype(jnp.uint32) * jnp.uint32(bc))
+           + col_offset + pj.astype(jnp.uint32) * jnp.uint32(bc))
 
     @pl.when(jnp.logical_and(pb == 0, pc == 0))
     def _():
@@ -96,7 +98,7 @@ def _rec_kernel(seeds_ref, rs_ref, scale_ref, lo_ref, hi_ref, x_ref, o_ref,
         # blocks partition the flat index space, so each tile overlaps
         # only ~1-2 of the k blocks; the other grid steps cost one
         # comparison instead of a chunk of hash-chains.
-        r0 = (jnp.float32(row_offset)
+        r0 = (row_offset.astype(jnp.float32)
               + pi.astype(jnp.float32) * jnp.float32(br))
         tile_lo = r0 * jnp.float32(orig_cols)
         tile_hi = (r0 + jnp.float32(br - 1) + 1.0) * jnp.float32(orig_cols)
@@ -123,8 +125,8 @@ def reconstruct_kernel_call(
     scale,                     # server_lr / N  (or 1 with pre-weighted rs)
     distribution: str = "rademacher",
     block: tuple = DEFAULT_BLOCK,
-    row_offset: int = 0,
-    col_offset: int = 0,
+    row_offset=0,
+    col_offset=0,
     interpret: bool | None = None,
     client_chunk: int = CLIENT_CHUNK,
     lo: jax.Array | None = None,   # (k,) leaf-local flat bounds (float32)
@@ -138,7 +140,11 @@ def reconstruct_kernel_call(
     single-scalar update; 2-D ``rs`` of width k runs the k-block-scalar
     decode with block index joining the grid.  ``masked=False`` (FULL
     mode: every projection spans the whole leaf) skips the flat-index
-    mask; the lo/hi bounds are then ignored.
+    mask; the lo/hi bounds are then ignored.  ``row_offset``/
+    ``col_offset`` may be Python ints or traced uint32 scalars — the
+    mesh-sharded server derives them from ``jax.lax.axis_index`` inside
+    ``shard_map``, so one compiled kernel reconstructs any shard's
+    slice of the direction chain (DESIGN §7).
     """
     rows, cols = x2d.shape
     br, bc = block
@@ -168,16 +174,18 @@ def reconstruct_kernel_call(
         rs = jnp.concatenate([rs, jnp.zeros((pad, k), jnp.float32)])
     num_chunks = (n + pad) // chunk
     scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    offs = jnp.stack([jnp.asarray(row_offset, jnp.uint32),
+                      jnp.asarray(col_offset, jnp.uint32)])
 
     kern = functools.partial(
         _rec_kernel, distribution=distribution, chunk=chunk,
         num_chunks=num_chunks, num_blocks=k, masked=masked, block=block,
-        leaf_tag=leaf_tag, row_offset=row_offset, col_offset=col_offset,
-        orig_cols=orig_cols)
+        leaf_tag=leaf_tag, orig_cols=orig_cols)
     return pl.pallas_call(
         kern,
         grid=(rows // br, cols // bc, k, num_chunks),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -190,4 +198,4 @@ def reconstruct_kernel_call(
         scratch_shapes=[pltpu.VMEM((br, bc), jnp.float32)],
         interpret=interpret,
     )(jnp.asarray(seeds, jnp.uint32), rs, scale_arr,
-      jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32), x2d)
+      jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32), offs, x2d)

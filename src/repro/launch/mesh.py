@@ -14,13 +14,32 @@ import jax
 
 from repro.core.compat import make_mesh
 
-__all__ = ["make_production_mesh", "mesh_axes_sizes"]
+__all__ = ["make_production_mesh", "make_fed_mesh", "mesh_axes_sizes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
+
+
+def make_fed_mesh(shape: tuple = (1, 1)):
+    """(`data`, `model`) mesh for the mesh-sharded federation server.
+
+    The sharded decode path (`repro.sharding.fed_rules`, DESIGN §7)
+    flattens both axes into one shard dimension over the parameter
+    vector; the two-axis shape is kept so the same mesh can also carry
+    client-parallel work on ``data``.  Shape ``(1, 1)`` is the
+    single-device layout, bit-identical to the unsharded path.
+    """
+    n_dev = len(jax.devices())
+    need = shape[0] * shape[1]
+    if need > n_dev:
+        raise ValueError(
+            f"mesh shape {shape} needs {need} devices, have {n_dev} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"before importing jax to fake them on CPU)")
+    return make_mesh(shape, ("data", "model"))
 
 
 def mesh_axes_sizes(mesh) -> dict:

@@ -1,11 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 test entry point.
+# Test entry point, two tiers (README §Testing):
 #
-#   ./test.sh              # full tier-1 suite
+#   ./test.sh              # fast tier: -m "not slow" (PR CI, inner loop)
+#   ./test.sh --full       # full tier-1 suite incl. slow e2e (nightly CI)
 #   ./test.sh tests/test_runtime.py -k sampler   # pass-through args
 #
+# Tier-1 (the correctness bar for every PR) is the FULL suite; the fast
+# tier is the same contracts minus the long engine/e2e/statistical runs
+# so the inner loop stays under half the full wall-clock.
+#
 # XLA_FLAGS forces 8 host-platform devices so the sharding paths are
-# exercised on CPU-only machines (the sharding e2e test additionally
+# exercised on CPU-only machines (tests/conftest.py pins the same
+# default for bare pytest runs; the sharding e2e test additionally
 # re-execs itself with its own device count).
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -14,4 +20,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-exec python -m pytest -x -q "$@"
+FULL=0
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --full) FULL=1 ;;
+    *) ARGS+=("$a") ;;
+  esac
+done
+
+MARK=()
+if [[ "$FULL" == 0 ]]; then
+  MARK=(-m "not slow")
+fi
+
+exec python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} ${ARGS[@]+"${ARGS[@]}"}

@@ -1,9 +1,38 @@
 import os
 import sys
 
+# Pin the host-platform device count BEFORE jax initializes, so the
+# mesh-sharding tests see a mesh-capable backend even on single-device
+# CI runners / bare `pytest` invocations (test.sh exports the same
+# flag; an explicit user-provided count wins).  Without this the
+# sharded-path tests would silently skip exactly where they matter.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")).strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running end-to-end tests (subprocess / many rounds)")
+
+
+@pytest.fixture(scope="session")
+def fed_mesh():
+    """Session-scoped 8-device (data=2, model=4) mesh for sharding tests."""
+    import jax
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices — XLA_FLAGS device-count pin was overridden")
+    from repro.launch.mesh import make_fed_mesh
+    return make_fed_mesh((2, 4))
+
+
+@pytest.fixture(scope="session")
+def fed_mesh_single():
+    """Session-scoped (1, 1) mesh — the bit-identity anchor layout."""
+    from repro.launch.mesh import make_fed_mesh
+    return make_fed_mesh((1, 1))

@@ -85,6 +85,7 @@ def test_param_counts_plausible():
         assert lo < n < hi, (name, n)
 
 
+@pytest.mark.slow
 def test_whisper_serve_consistency():
     """Enc-dec: prefill + decode logits equal the training forward."""
     from repro.models.encdec import (

@@ -64,6 +64,7 @@ def test_sdpa_vs_naive(kwargs):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_blocked_sdpa_matches_einsum_sdpa():
     q, k, v = _qkv(s=300)
     pos = jnp.arange(300, dtype=jnp.int32)
@@ -75,6 +76,7 @@ def test_blocked_sdpa_matches_einsum_sdpa():
                                    rtol=1e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_gqa_equals_mha_with_repeated_kv():
     """GQA(kv=2) == MHA(kv=4) when KV heads are materially repeated."""
     cfg2 = ModelConfig(name="g", arch_type="dense", num_layers=1, d_model=64,
@@ -98,6 +100,7 @@ def test_gqa_equals_mha_with_repeated_kv():
                                atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ring_cache_long_decode():
     """64 decode steps against a 16-slot ring == full forward."""
     cfg = ModelConfig(name="w", arch_type="dense", num_layers=1, d_model=32,
@@ -129,6 +132,7 @@ def _mamba_cfg():
                        vocab_size=16, ssm_state=8, dtype="float32")
 
 
+@pytest.mark.slow
 def test_mamba_chunked_scan_vs_stepwise():
     """Full-sequence chunked scan == token-by-token recurrence."""
     cfg = _mamba_cfg()
@@ -148,6 +152,7 @@ def test_mamba_chunked_scan_vs_stepwise():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_mamba_state_carry_across_calls():
     """block(x₁∥x₂) == block(x₁) then block(x₂ | state)."""
     cfg = _mamba_cfg()
@@ -165,6 +170,7 @@ def test_mamba_state_carry_across_calls():
 # moe
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_moe_single_expert_equals_dense_ffn():
     """E=1, k=1, dropless → MoE ≡ plain SwiGLU FFN with expert-0 weights."""
     cfg = ModelConfig(name="m1", arch_type="moe", num_layers=1, d_model=32,
@@ -181,6 +187,7 @@ def test_moe_single_expert_equals_dense_ffn():
     assert float(aux["moe_dropped_frac"]) == 0.0
 
 
+@pytest.mark.slow
 def test_moe_dropless_no_drops_and_topk_weighting():
     cfg = ModelConfig(name="m4", arch_type="moe", num_layers=1, d_model=32,
                       num_heads=2, num_kv_heads=1, d_ff=16, vocab_size=16,
@@ -194,6 +201,7 @@ def test_moe_dropless_no_drops_and_topk_weighting():
     assert float(aux["moe_aux_loss"]) > 0
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_monotone():
     """Lower capacity factor ⇒ more dropped tokens (never negative)."""
     import dataclasses

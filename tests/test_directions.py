@@ -177,6 +177,7 @@ def test_k_scalar_codec_roundtrip_lossy_channel():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_optimal_block_weights_reduce_mse():
     """Wiener per-block shrinkage beats the unbiased mean in MSE."""
     d, k, n_clients, trials = 32, 4, 5, 2048

@@ -1,0 +1,191 @@
+"""Differential kernel sweep: Pallas ≡ kernels/ref.py, family × k × awkward d.
+
+Property-style contracts (DESIGN §3/§6/§7):
+
+* every registered direction family, every scalars-per-upload k, and the
+  awkward dimension regimes — d smaller than one kernel tile, d not a
+  multiple of tile·shards, k exceeding the number of tiles a leaf spans —
+  agree with the pure-jnp oracles within float reduction order;
+* the **offset parameter**: calling the kernels on row-slices of the
+  operand with ``row_offset`` set (the mesh-shard composition) and
+  concatenating the slices is **bit-identical** to the offset-0
+  full-width call for reconstruction, and sums to the full projection
+  within fp32 reassociation for the projection.
+
+Kernels run in TPU interpret mode on CPU; the shapes are deliberately
+tiny so the whole sweep stays in the fast test tier.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.directions import FAMILIES
+from repro.core.projection import ProjectionMode, _proj_seed
+from repro.kernels import ops, ref
+from repro.kernels.seeded_projection import projection_blocks_kernel_call
+from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
+
+# d < one tile; d not a multiple of tile (or tile·shards); k > #tiles.
+AWKWARD_SHAPES = [(17,), (100,), (3, 130), (40, 180)]
+KS = [1, 3, 8]
+# Fast-tier subset: one sub-tile shape + one tile-misaligned shape, k ≤ 3.
+QUICK_SHAPES = [(17,), (3, 130)]
+QUICK_KS = [1, 3]
+
+
+def _tree(shape, seed):
+    arr = np.random.RandomState(seed).randn(*shape)
+    return {"x": jnp.asarray(arr, jnp.float32)}
+
+
+def _projection_sweep(family, shapes, ks):
+    dist = FAMILIES[family].distribution
+    for si, shape in enumerate(shapes):
+        tree = _tree(shape, si)
+        d = int(np.prod(shape))
+        for k in ks:
+            mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+            rk = np.asarray(ops.project_tree_kernel(
+                tree, 31 + si, dist, num_blocks=k, mode=mode))
+            rr = np.asarray(ref.project_tree_ref(
+                tree, 31 + si, dist, num_projections=k, mode=mode))
+            assert rk.shape == (k,)
+            np.testing.assert_allclose(
+                rk, rr, rtol=1e-4, atol=1e-4 * max(d, 1),
+                err_msg=f"{family} shape={shape} k={k}")
+
+
+def _reconstruct_sweep(family, shapes, ks):
+    dist = FAMILIES[family].distribution
+    n = 3
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 11
+    for si, shape in enumerate(shapes):
+        tree = _tree(shape, 10 + si)
+        for k in ks:
+            mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+            rs = jnp.asarray(np.random.RandomState(k).randn(n, k), jnp.float32)
+            uk = ops.server_update_kernel(tree, rs, seeds, 0.5, dist, mode=mode)
+            ur = ref.server_update_ref(tree, rs, seeds, 0.5, dist,
+                                       num_projections=k, mode=mode)
+            np.testing.assert_allclose(
+                np.asarray(uk["x"]), np.asarray(ur["x"]), rtol=1e-4, atol=1e-4,
+                err_msg=f"{family} shape={shape} k={k}")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_projection_differential_quick(family):
+    _projection_sweep(family, QUICK_SHAPES, QUICK_KS)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_reconstruct_differential_quick(family):
+    _reconstruct_sweep(family, QUICK_SHAPES, QUICK_KS)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_projection_differential_sweep(family):
+    _projection_sweep(family, AWKWARD_SHAPES, KS)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_reconstruct_differential_sweep(family):
+    _reconstruct_sweep(family, AWKWARD_SHAPES, KS)
+
+
+def _leaf_bounds_full(rows, cols, k, mode):
+    lo, hi = ops.leaf_block_bounds(0, rows * cols, rows * cols, k, mode)
+    return jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32)
+
+
+# The offset contract is family-uniform (offsets only shift the hash
+# coordinates) — the two paper families stay in the fast tier, the
+# beyond-paper ones ride the nightly full sweep.
+FAMILY_PARAMS = [
+    f if f in ("gaussian", "rademacher") else
+    pytest.param(f, marks=pytest.mark.slow)
+    for f in sorted(FAMILIES)
+]
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+@pytest.mark.parametrize("k", [1, 4])
+def test_reconstruct_offset_shards_bit_identical(family, k):
+    """Offset-sliced reconstruction concatenated over shards ≡ offset-0 call.
+
+    The mesh-shard contract: slicing the operand into S row-shards, each
+    reconstructed with its global ``row_offset`` (passed as a *traced*
+    scalar, as shard_map does), concatenates to the bit-exact full-width
+    result — the per-block seed chain never notices the shard layout.
+    """
+    dist = FAMILIES[family].distribution.value
+    rows, cols, block = 32, 256, (8, 128)
+    x = jnp.asarray(np.random.RandomState(5).randn(rows, cols), jnp.float32)
+    n = 4
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 2
+    rs = jnp.asarray(np.random.RandomState(6).randn(n, k), jnp.float32)
+    mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+    lo, hi = _leaf_bounds_full(rows, cols, k, mode)
+    masked = k > 1
+
+    full = reconstruct_kernel_call(
+        x, seeds, rs, 0, 0.25, dist, block, lo=lo, hi=hi,
+        orig_cols=cols, masked=masked)
+
+    call = jax.jit(lambda blk, ro: reconstruct_kernel_call(
+        blk, seeds, rs, 0, 0.25, dist, block, row_offset=ro,
+        lo=lo, hi=hi, orig_cols=cols, masked=masked))
+    for s in (2, 4):
+        per = rows // s
+        parts = [call(x[i * per:(i + 1) * per], jnp.uint32(i * per))
+                 for i in range(s)]
+        cat = np.concatenate([np.asarray(p) for p in parts], axis=0)
+        assert np.array_equal(cat, np.asarray(full)), (family, k, s)
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+@pytest.mark.parametrize("k", [1, 4])
+def test_projection_offset_shards_sum(family, k):
+    """Σ over row-shard projections == full-width projection (per block)."""
+    dist = FAMILIES[family].distribution.value
+    rows, cols, block = 32, 256, (8, 128)
+    x = jnp.asarray(np.random.RandomState(7).randn(rows, cols), jnp.float32)
+    mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+    lo, hi = _leaf_bounds_full(rows, cols, k, mode)
+    masked = k > 1
+    proj_seeds = jnp.stack([_proj_seed(9, j) for j in range(k)])
+
+    full = np.asarray(projection_blocks_kernel_call(
+        x, proj_seeds, 0, lo, hi, dist, block, orig_cols=cols, masked=masked))
+
+    call = jax.jit(lambda blk, ro: projection_blocks_kernel_call(
+        blk, proj_seeds, 0, lo, hi, dist, block, row_offset=ro,
+        orig_cols=cols, masked=masked))
+    per = rows // 4
+    parts = sum(np.asarray(call(x[i * per:(i + 1) * per], jnp.uint32(i * per)))
+                for i in range(4))
+    np.testing.assert_allclose(parts, full, rtol=1e-4, atol=1e-3)
+
+
+def test_offset_col_slices_bit_identical():
+    """Col-offset slices (1-D leaves shard their cols) also concatenate
+    bit-exactly — both offsets compose with traced values under jit."""
+    rows, cols, block = 8, 512, (8, 128)
+    x = jnp.asarray(np.random.RandomState(8).randn(rows, cols), jnp.float32)
+    n, k = 3, 4
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 1
+    rs = jnp.asarray(np.random.RandomState(9).randn(n, k), jnp.float32)
+    lo, hi = _leaf_bounds_full(rows, cols, k, ProjectionMode.BLOCK)
+    full = reconstruct_kernel_call(
+        x, seeds, rs, 0, 1.0, "rademacher", block, lo=lo, hi=hi,
+        orig_cols=cols, masked=True)
+    call = jax.jit(lambda blk, co: reconstruct_kernel_call(
+        blk, seeds, rs, 0, 1.0, "rademacher", block, col_offset=co,
+        lo=lo, hi=hi, orig_cols=cols, masked=True))
+    per = cols // 4
+    parts = [call(x[:, i * per:(i + 1) * per], jnp.uint32(i * per))
+             for i in range(4)]
+    cat = np.concatenate([np.asarray(p) for p in parts], axis=1)
+    assert np.array_equal(cat, np.asarray(full))

@@ -14,7 +14,8 @@ from repro.core.projection import ProjectionMode
 from repro.kernels import ops, ref
 
 SHAPES = [(128, 512), (300, 700), (1000,), (3, 5, 130), (17,), ()]
-DTYPES = [jnp.float32, jnp.bfloat16]
+DTYPES = [jnp.float32,
+          pytest.param(jnp.bfloat16, marks=pytest.mark.slow)]
 DISTS = [Distribution.RADEMACHER, Distribution.GAUSSIAN]
 ALL_DISTS = list(Distribution)
 
@@ -63,6 +64,7 @@ def test_qsgd_kernel_vs_ref(shape, bits):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_qsgd_kernel_unbiased():
     """Stochastic rounding is unbiased: mean over seeds ≈ identity."""
     x = {"x": jnp.asarray(np.random.RandomState(4).randn(64, 128), jnp.float32)}

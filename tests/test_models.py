@@ -18,6 +18,15 @@ from repro.models.lm import init_lm, lm_decode, lm_forward, lm_prefill
 
 KEY = jax.random.PRNGKey(0)
 
+# The widest reduced variants dominate suite wall-clock (≥5 s each on
+# CPU); they ride the nightly full tier while PR CI smokes the rest.
+_HEAVY_ARCHS = {"jamba-v0.1-52b", "whisper-tiny", "qwen3-moe-30b-a3b",
+                "qwen3-moe-235b-a22b", "falcon-mamba-7b", "paligemma-3b"}
+ARCH_PARAMS = [
+    pytest.param(n, marks=pytest.mark.slow) if n in _HEAVY_ARCHS else n
+    for n in ARCH_IDS
+]
+
 
 def _batch_for(cfg, B=2, S=32):
     batch = {"tokens": jnp.ones((B, S), jnp.int32),
@@ -31,7 +40,7 @@ def _batch_for(cfg, B=2, S=32):
     return batch
 
 
-@pytest.mark.parametrize("name", ARCH_IDS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_arch_smoke_forward_and_train_step(name):
     """Reduced variant: loss + one SGD step, asserts shapes and no NaNs."""
     arch = get_arch(name, reduced=True)
@@ -52,7 +61,16 @@ def test_arch_smoke_forward_and_train_step(name):
     assert float(loss2) != float(loss)
 
 
-@pytest.mark.parametrize("name", ARCH_IDS)
+# Serving smoke: three representative archs (dense / MoE / SSM-hybrid
+# families) in the fast tier; the rest ride nightly.
+_SERVE_FAST = {"smollm-360m", "qwen1.5-4b", "granite-8b"}
+SERVE_PARAMS = [
+    n if n in _SERVE_FAST else pytest.param(n, marks=pytest.mark.slow)
+    for n in ARCH_IDS
+]
+
+
+@pytest.mark.parametrize("name", SERVE_PARAMS)
 def test_arch_smoke_serve(name):
     """prefill + decode: logits (B,1,V), finite, cache shapes consistent."""
     arch = get_arch(name, reduced=True)
@@ -99,7 +117,9 @@ def _consistency_cfg(kind):
     raise ValueError(kind)
 
 
-@pytest.mark.parametrize("kind", ["dense", "window", "ssm", "hybrid"])
+@pytest.mark.parametrize("kind", [
+    pytest.param("dense", marks=pytest.mark.slow), "window", "ssm",
+    pytest.param("hybrid", marks=pytest.mark.slow)])
 def test_decode_matches_forward(kind):
     """The serving invariant: prefill+decode logits == training forward."""
     cfg = _consistency_cfg(kind)

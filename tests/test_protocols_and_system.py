@@ -128,6 +128,7 @@ def test_cost_model_energy_eq13():
 # production train step (reduced arch, single device)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_make_train_step_round_mechanics():
     """Production round: params move by the reconstructed update, stay
     finite, and the uplink accounting matches (m + seed) × clients.

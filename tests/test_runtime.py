@@ -192,6 +192,7 @@ def test_full_participation_reproduces_simulation_bitforbit():
         np.testing.assert_array_equal(a, b)
 
 
+@pytest.mark.slow
 def test_event_driven_partial_participation_descends():
     from repro.models.mlp_classifier import init_mlp
 
@@ -209,6 +210,7 @@ def test_event_driven_partial_participation_descends():
     assert abs(np.mean(h["weight_sum"]) - 1.0) < 0.05
 
 
+@pytest.mark.slow
 def test_event_driven_async_matches_sync_at_tau_zero():
     """round_period=∞ keeps every upload at τ=0: same trajectory as sync."""
     from repro.models.mlp_classifier import init_mlp
@@ -287,6 +289,7 @@ def test_kernel_weighted_update_matches_fori():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_wire_width_fp16_still_trains():
     from repro.models.mlp_classifier import init_mlp
 

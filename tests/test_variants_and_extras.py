@@ -17,7 +17,13 @@ def digits_setup():
     return make_client_datasets(xtr, ytr, 8), xte, yte
 
 
-@pytest.mark.parametrize("method", METHODS)
+# Fast tier: the four paper-table methods; beyond-paper variants nightly.
+_FAST_METHODS = {"fedscalar_rademacher", "fedscalar_gaussian", "fedavg", "qsgd"}
+
+
+@pytest.mark.parametrize("method", [
+    m if m in _FAST_METHODS else pytest.param(m, marks=pytest.mark.slow)
+    for m in METHODS])
 def test_every_method_runs_and_is_finite(digits_setup, method):
     clients, xte, yte = digits_setup
     h = run_simulation(
