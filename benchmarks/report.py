@@ -27,6 +27,7 @@ import numpy as np
 # Every section the rendered report must contain (checked by --check).
 REQUIRED_SECTIONS = (
     "## §Paper-validation",
+    "## §Baselines",
     "## §Runtime",
     "## §Sharding",
     "## §Directions",
@@ -80,6 +81,30 @@ def _include(path: str) -> str:
     if os.path.exists(path):
         return open(path).read()
     return f"*(curated narrative `{path}` not present in this checkout)*"
+
+
+def baselines_table() -> str:
+    path = "experiments/baselines/tradeoff.csv"
+    if not os.path.exists(path):
+        return ("*(no artifact — run `PYTHONPATH=src python examples/"
+                "baseline_tradeoff.py` or `python -m benchmarks.run` to "
+                "produce `experiments/baselines/tradeoff.csv`)*")
+    d = np.atleast_1d(np.genfromtxt(path, delimiter=",", names=True,
+                                    dtype=None, encoding="utf-8"))
+    rows = [
+        f"| {r['protocol']} | {int(r['d']):,} | {r['access']} | "
+        f"{int(r['bits_per_client_per_round']):,} | "
+        f"{r['final_accuracy']*100:.2f} | {r['total_uplink_bits']:.3g} | "
+        f"{r['total_wall_s']:.3g} | {r['total_energy_j']:.3g} | "
+        f"{r['acc_at_1e6_bits']*100:.2f} | "
+        f"{r['acc_at_1250_s']*100:.2f} | {r['acc_at_50_j']*100:.2f} |"
+        for r in d
+    ]
+    hdr = ("| protocol | d | access | bits/client/round | final acc % | "
+           "total bits | wall s | energy J | acc@10⁶ bits % | "
+           "acc@1250 s % | acc@50 J % |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
 
 
 def runtime_throughput_table() -> str:
@@ -149,6 +174,22 @@ def main():
           "(`examples/fedscalar_digits.py`).\n")
     print(digits_summary())
     print(_include("benchmarks/EXPERIMENTS_validation_notes.md"))
+
+    print("\n## §Baselines — FedAvg/QSGD/FedScalar through one engine "
+          "(Table I / §V, DESIGN §8)\n")
+    print("All three protocols run through the same event-driven runtime "
+          "(`run_federation(protocol_name=…)`): same cohort sampler, "
+          "channel, streaming server and cost model — only the wire "
+          "frame differs (scalar / dense / quantized).  N = 20 at full "
+          "participation, R = 0.1 Mbps, P_tx = 2 W; TDMA rows replay "
+          "the identical channel draws under sequential slots.  The "
+          "paper's system claim is the column shape: FedScalar's "
+          "bits/client/round is **independent of d** while FedAvg (d·32) "
+          "and QSGD (d·8 + norms) scale linearly, which at 0.1 Mbps "
+          "orders wall-clock and energy fedscalar ≪ qsgd < fedavg.  "
+          "Engine rounds are bit-identical to the `core` round "
+          "functions (`tests/test_protocol_parity.py`).\n")
+    print(baselines_table())
 
     print("\n## §Runtime — server aggregation throughput (clients/s)\n")
     print("Streaming server round close, one 1M-param leaf, weighted "

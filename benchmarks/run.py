@@ -8,6 +8,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig4_bits_*         — accuracy at a 10⁶-bit communication budget
   fig5_wall_*         — accuracy at t = 1250 s wall-clock
   fig6_energy_*       — accuracy at 50 J transmit energy
+  baseline_*          — Table I / §V trade-off: the three protocols
+                        through the engine at 0.1 Mbps, concurrent +
+                        TDMA, d swept (derived = bits/round + final acc;
+                        CSV → experiments/baselines/tradeoff.csv)
   prop21_variance     — Rademacher-vs-Gaussian aggregation-variance gap
                         (derived = measured/theory; theory = 2Σ‖δₙ‖²/N²)
   direction_*         — variance-vs-bandwidth sweep of the pluggable
@@ -98,6 +102,31 @@ def bench_digits(rounds: int):
              f"acc@1250s={at_budget(h, 1250.0, 'cum_wall_s'):.4f}")
         emit(f"fig6_energy_{method}", us,
              f"acc@50J={at_budget(h, 50.0, 'cum_energy_j'):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table I / §V: protocol trade-off through the engine (DESIGN §8)
+# ---------------------------------------------------------------------------
+
+def bench_baseline_tradeoff(rounds: int):
+    """FedAvg/QSGD/FedScalar through one engine at the paper regime.
+
+    The acceptance shape: FedScalar's bits/upload column constant in d,
+    the baselines Θ(d), and wall/energy ordered fedscalar ≪ qsgd <
+    fedavg at 0.1 Mbps.  Rows land in
+    ``experiments/baselines/tradeoff.csv`` for report §Baselines.
+    """
+    from repro.fed.baselines import baseline_tradeoff, write_tradeoff_csv
+
+    t0 = time.perf_counter()
+    rows = baseline_tradeoff(rounds=rounds)
+    us = (time.perf_counter() - t0) / max(len(rows), 1) * 1e6
+    for r in rows:
+        emit(f"baseline_{r['protocol']}_d{r['d']}_{r['access']}", us,
+             f"{r['bits_per_client_per_round']}bits/up_"
+             f"acc={r['final_accuracy']:.4f}_wall={r['total_wall_s']:.0f}s_"
+             f"energy={r['total_energy_j']:.1f}J")
+    write_tradeoff_csv(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -350,6 +379,7 @@ def main() -> None:
     bench_table1()
     if not args.skip_digits:
         bench_digits(args.rounds)
+        bench_baseline_tradeoff(args.rounds)
     bench_prop21()
     bench_direction_sweep()
     bench_kernels()

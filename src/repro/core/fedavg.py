@@ -46,4 +46,7 @@ def fedavg_round(
 
 
 def upload_bits_per_client(params: Any, cfg: FedAvgConfig) -> int:
-    return tree_size(params) * cfg.value_bits
+    """d·32 dense frame (costmodel single source, Table I)."""
+    from repro.fed.costmodel import dense_upload_bits
+
+    return dense_upload_bits(tree_size(params), cfg.value_bits)

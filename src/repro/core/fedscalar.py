@@ -321,6 +321,16 @@ def _sqnorms(deltas: Any) -> jax.Array:
 
 
 def upload_bits_per_client(params: Any, cfg: FedScalarConfig) -> int:
-    """Uplink payload per client per round: (m scalars + 1 seed) × width."""
-    del params  # dimension-independent — the whole point of the paper
-    return (cfg.num_projections + 1) * cfg.scalar_bits
+    """Uplink payload per client per round: m scalars at ``scalar_bits``
+    plus the seed, which always rides the wire as a u32
+    (:class:`repro.fed.runtime.transport.WireFormat`).
+
+    Dimension-independent — the whole point of the paper.  Delegates to
+    :func:`repro.fed.costmodel.upload_bits`, the same single source the
+    wire codec and the direction families use, so half-width scalar
+    configs account exactly what the codec serializes (k·16 + 32).
+    """
+    del params
+    from repro.fed.costmodel import upload_bits
+
+    return upload_bits(cfg.num_projections, cfg.scalar_bits)

@@ -8,8 +8,26 @@ plus the per-client L2 norm.  The quantizer is unbiased:
     ζ_i = ⌊s·|x_i|/‖x‖₂⌋/s  or  (⌊·⌋+1)/s  w.p. frac(s·|x_i|/‖x‖₂)
 
 Upload cost per client per round: d × bits (sign folded into the level
-code) + 32 (norm).  The dequantized update is exactly representable at
-the server, so quantize→dequantize here models the full wire round-trip.
+code) + one 32-bit norm per quantized tensor — the single source of
+that formula is :func:`repro.fed.costmodel.quantized_upload_bits`,
+which the QSGD wire codec and :func:`upload_bits_per_client` both
+delegate to.  The dequantized update is exactly representable at the
+server, so quantize→dequantize here models the full wire round-trip.
+
+The stochastic-rounding uniforms come from the same counter-based
+SplitMix32 chain as the projection vectors (:mod:`repro.core.prng`),
+addressed by ``(seed, leaf_tag, row, col)`` — so the quantizer is a
+pure function of ``(seed, coordinates)`` and three consumers are
+bit-identical by construction: this module, the jnp oracle
+(:func:`repro.kernels.ref.qsgd_roundtrip_ref`, a thin wrapper around
+:func:`quantize_tree`) and the fused Pallas kernel
+(:mod:`repro.kernels.qsgd_quant`).  That determinism is what lets the
+federation runtime's ``qsgd`` protocol reproduce :func:`qsgd_round`
+bit-for-bit from (levels, norm) wire frames (DESIGN.md §8).
+
+Shapes/dtypes: levels are float32-valued signed integers in
+[−(2^{bits−1}−1), 2^{bits−1}−1]; norms are float32 per leaf; the
+round-trip value keeps each leaf's dtype.
 """
 from __future__ import annotations
 
@@ -19,16 +37,31 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.fedscalar import make_local_sgd
-from repro.core.projection import tree_size
+from repro.core.fedscalar import make_local_sgd, round_seeds_for
+from repro.core.prng import fold_seed, hash_u32, uniform01
+from repro.core.projection import _view2d, tree_size
 
 __all__ = [
+    "QSGD_TAG",
     "QSGDConfig",
+    "quant_seeds",
+    "leaf_norm",
+    "quantize_levels",
     "quantize_leaf",
     "quantize_tree",
     "qsgd_round",
     "upload_bits_per_client",
 ]
+
+# Hash-stream tag of the stochastic-rounding uniforms.  The Pallas
+# kernel (repro.kernels.qsgd_quant) imports this constant, so the three
+# implementations draw the same uniform at every (seed, row, col).
+QSGD_TAG = 0x7FEB352D
+
+# Salt of the per-(round, client) quantization seed chain — distinct
+# from the projection-seed salt so ξ and the rounding stream never
+# collide on the same (round, client).
+_QUANT_SALT = 0x0A5D
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,27 +72,90 @@ class QSGDConfig:
     bits: int = 8                 # paper's comparison point
     norm_bits: int = 32
 
+    @property
+    def levels(self) -> int:
+        return (1 << (self.bits - 1)) - 1  # one bit spent on sign
 
-def quantize_leaf(x: jax.Array, key: jax.Array, levels: int) -> jax.Array:
-    """Unbiased stochastic quantization of one flat leaf (round-trip)."""
-    xf = x.astype(jnp.float32)
-    norm = jnp.linalg.norm(xf.reshape(-1))
-    norm = jnp.where(norm == 0, 1.0, norm)
+
+def quant_seeds(round_idx, client_ids) -> jax.Array:
+    """Deterministic per-(round, client) quantization seeds.
+
+    Indexing by *population* client id (not vmap position) is what lets
+    the event-driven runtime's sampled cohorts reproduce
+    :func:`qsgd_round` exactly: both derive the rounding stream from
+    the same (round, id) pair.
+    """
+    return round_seeds_for(round_idx, client_ids, salt=_QUANT_SALT)
+
+
+def _coords_2d(shape: tuple):
+    """(row, col) uint32 coordinate arrays over a leaf's 2-D view.
+
+    The (rows, cols) collapse is :func:`repro.core.projection._view2d`
+    — the same single source behind ``LeafLayout`` — so the quantizer,
+    the kernels' grid iota and the protocol layer's frame slicing all
+    address identical coordinates.
+    """
+    shape2 = _view2d(tuple(shape))
+    row = jax.lax.broadcasted_iota(jnp.uint32, shape2, 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, shape2, 1)
+    return shape2, row, col
+
+
+def leaf_norm(x: jax.Array) -> jax.Array:
+    """Guarded L2 norm: float32, exact zero maps to 1 (zero levels)."""
+    norm = jnp.linalg.norm(x.astype(jnp.float32).reshape(-1))
+    return jnp.where(norm == 0, 1.0, norm)
+
+
+def quantize_levels(x: jax.Array, seed, levels: int, tag: int = 0):
+    """→ ``(signed_levels, norm)`` of one leaf: the QSGD wire content.
+
+    ``signed_levels`` is a float32 array of exact integers in
+    [−levels, levels] (sign folded in); ``norm`` is the guarded L2
+    norm.  The stochastic rounding uniform at element (row, col) is
+    ``uniform01(hash(fold_seed(seed, tag), row, col, QSGD_TAG))`` —
+    identical to the kernel and the oracle.
+    """
+    shape2, row, col = _coords_2d(tuple(x.shape))
+    xf = x.astype(jnp.float32).reshape(shape2)
+    norm = leaf_norm(xf)
+    u = uniform01(hash_u32(fold_seed(seed, tag), row, col, QSGD_TAG))
     scaled = jnp.abs(xf) / norm * levels
     floor = jnp.floor(scaled)
-    frac = scaled - floor
-    u = jax.random.uniform(key, x.shape)
-    level = floor + (u < frac).astype(jnp.float32)
-    q = norm * jnp.sign(xf) * level / levels
+    level = floor + (u < (scaled - floor)).astype(jnp.float32)
+    signed = jnp.sign(xf) * level
+    return signed.reshape(x.shape), norm
+
+
+def dequantize_levels(signed_levels: jax.Array, norm, levels: int) -> jax.Array:
+    """Server-side decode: q = norm · signed_level / levels (float32).
+
+    Multiplying the *signed* level by the norm is bit-identical to the
+    client-side ``norm · sign(x) · level`` grouping (multiplication by
+    ±1 is exact), so decode(encode(δ)) ≡ the round-trip value.
+    """
+    return (jnp.asarray(norm, jnp.float32) * signed_levels.astype(jnp.float32)
+            / jnp.float32(levels))
+
+
+def quantize_leaf(x: jax.Array, seed, levels: int, tag: int = 0) -> jax.Array:
+    """Unbiased stochastic quantization of one leaf (full round-trip)."""
+    signed, norm = quantize_levels(x, seed, levels, tag)
+    q = norm * signed.astype(jnp.float32) / jnp.float32(levels)
     return q.astype(x.dtype)
 
 
-def quantize_tree(tree: Any, key: jax.Array, bits: int) -> Any:
-    """Quantize each leaf independently (per-tensor norms, as deployed)."""
+def quantize_tree(tree: Any, seed, bits: int) -> Any:
+    """Quantize each leaf independently (per-tensor norms, as deployed).
+
+    The leaf ordinal is folded into the seed (``fold_seed``), so the
+    per-leaf streams are decorrelated — and identical to the Pallas
+    kernel's, which receives the same folded seed per leaf.
+    """
     levels = (1 << (bits - 1)) - 1  # one bit spent on sign
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    out = [quantize_leaf(l, k, levels) for l, k in zip(leaves, keys)]
+    out = [quantize_leaf(l, seed, levels, tag) for tag, l in enumerate(leaves)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -69,13 +165,22 @@ def qsgd_round(
     round_idx,
     grad_fn: Callable,
     cfg: QSGDConfig,
+    client_ids: jax.Array | None = None,
 ):
+    """One QSGD round over N explicit clients (vmapped).
+
+    ``client_ids`` names the participating clients (defaults to
+    ``arange(N)``); the rounding streams are keyed by (round, id), so
+    the federation runtime's ``qsgd`` protocol reproduces this function
+    bit-for-bit on a sampled cohort by passing the cohort's ids.
+    """
     local = make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
     deltas = jax.vmap(local, in_axes=(None, 0))(params, client_batches)
     n = jax.tree_util.tree_leaves(deltas)[0].shape[0]
-    base = jax.random.fold_in(jax.random.PRNGKey(0xA5), round_idx)
-    keys = jax.random.split(base, n)
-    qdeltas = jax.vmap(lambda d, k: quantize_tree(d, k, cfg.bits))(deltas, keys)
+    if client_ids is None:
+        client_ids = jnp.arange(n, dtype=jnp.uint32)
+    seeds = quant_seeds(round_idx, client_ids)
+    qdeltas = jax.vmap(lambda d, s: quantize_tree(d, s, cfg.bits))(deltas, seeds)
     mean_delta = jax.tree_util.tree_map(
         lambda d: jnp.mean(d.astype(jnp.float32), axis=0), qdeltas
     )
@@ -86,5 +191,9 @@ def qsgd_round(
 
 
 def upload_bits_per_client(params: Any, cfg: QSGDConfig) -> int:
+    """d·bits + one norm per quantized tensor (costmodel single source)."""
+    from repro.fed.costmodel import quantized_upload_bits
+
     n_leaves = len(jax.tree_util.tree_leaves(params))
-    return tree_size(params) * cfg.bits + n_leaves * cfg.norm_bits
+    return quantized_upload_bits(tree_size(params), cfg.bits,
+                                 num_norms=n_leaves, norm_bits=cfg.norm_bits)

@@ -1,12 +1,21 @@
-"""Federated layer: simulation driver, cost model, event-driven runtime."""
-from repro.fed.costmodel import ChannelConfig, CostModel, table1_upload_times
+"""Federated layer: simulation driver, cost model, protocols, runtime."""
+from repro.fed.costmodel import (
+    ChannelConfig,
+    CostModel,
+    dense_upload_bits,
+    quantized_upload_bits,
+    table1_upload_times,
+    upload_bits,
+)
 from repro.fed.simulation import SimulationConfig, run_simulation, METHODS
 
 __all__ = [
     "ChannelConfig", "CostModel", "table1_upload_times",
+    "upload_bits", "dense_upload_bits", "quantized_upload_bits",
     "SimulationConfig", "run_simulation", "METHODS",
 ]
 
-# The event-driven runtime (repro.fed.runtime) is imported lazily by
-# callers — it pulls in the kernel stack, which this package's light
-# users (cost-model tests, Table I) don't need.
+# The event-driven runtime (repro.fed.runtime) and the uplink-protocol
+# registry (repro.fed.protocols) are imported lazily by callers — they
+# pull in the kernel stack, which this package's light users
+# (cost-model tests, Table I) don't need.

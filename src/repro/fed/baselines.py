@@ -1,0 +1,149 @@
+"""Paper-parity baseline harness: the Table I / §V trade-off sweep.
+
+Runs FedScalar, FedAvg and QSGD **through the same engine**
+(:func:`repro.fed.runtime.run_federation` with ``protocol_name``
+swept) on the digits task at the paper's bandwidth-constrained regime
+(R = 0.1 Mbps, P_tx = 2 W, N = 20 full participation), over several
+model dimensions d, and tabulates accuracy against cumulative uplink
+bits, wall-clock seconds (eq. 12) and transmit energy (eq. 13) under
+both medium-access schemes of Table I (concurrent and TDMA).
+
+The shape the sweep must reproduce (ISSUE acceptance / paper §V):
+
+* FedScalar's bits-per-upload column is **constant in d** (the
+  (k + 1)·32-bit frame), while FedAvg and QSGD scale as Θ(d),
+* at 0.1 Mbps the wall-clock and energy orderings are
+  fedscalar ≪ qsgd < fedavg, for both access schemes.
+
+One training run serves both access schemes: the trajectory is
+access-independent (access only reorders air time), so the TDMA rows
+re-run the cost accounting with the identical per-upload channel draws
+(same ``rng_seed`` → same lognormal fluctuations) and ``access=
+"tdma"``.  Used by ``benchmarks/run.py`` (→ ``experiments/baselines/
+tradeoff.csv`` → report §Baselines) and ``examples/
+baseline_tradeoff.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.fed.costmodel import ChannelConfig, replay_round_costs
+
+__all__ = ["TRADEOFF_CSV", "TRADEOFF_COLUMNS", "baseline_tradeoff", "write_tradeoff_csv"]
+
+TRADEOFF_CSV = "experiments/baselines/tradeoff.csv"
+
+TRADEOFF_COLUMNS = (
+    "protocol", "access", "d", "bits_per_client_per_round", "rounds",
+    "final_accuracy", "total_uplink_bits", "total_wall_s", "total_energy_j",
+    "acc_at_1e6_bits", "acc_at_1250_s", "acc_at_50_j",
+)
+
+# Accuracy-at-budget points (match benchmarks.run figs 4–6).
+_BITS_BUDGET = 1e6
+_WALL_BUDGET = 1250.0
+_ENERGY_BUDGET = 50.0
+
+
+def _acc_at(h: dict, key: str, budget: float) -> float:
+    idx = int(np.searchsorted(h[key], budget, side="right")) - 1
+    return float(h["accuracy"][idx]) if idx >= 0 else 0.0
+
+
+def _cost_totals(channel: ChannelConfig, bits_per_upload: int, rounds: int,
+                 n: int, d: int, rng_seed: int):
+    """Cumulative cost curves for one access scheme.
+
+    Shares :func:`repro.fed.costmodel.replay_round_costs` with the
+    engine's fused path — same ``rng_seed`` → identical channel draws,
+    so the concurrent rows match the engine history exactly and the
+    TDMA rows differ only in the access rule.
+    """
+    bits, wall, energy = replay_round_costs(
+        channel, bits_per_upload, rounds, n,
+        fedavg_bits_per_client=d * channel.float_bits, rng_seed=rng_seed)
+    return np.cumsum(bits), np.cumsum(wall), np.cumsum(energy)
+
+
+def baseline_tradeoff(
+    rounds: int = 150,
+    protocols: Sequence[str] = ("fedscalar", "fedavg", "qsgd"),
+    hidden_sizes: Sequence[tuple] = ((24, 12), (48, 24)),
+    access: Sequence[str] = ("concurrent", "tdma"),
+    num_clients: int = 20,
+    bandwidth_bps: float = 0.1e6,
+    seed: int = 0,
+) -> list[dict]:
+    """→ one row dict per (protocol, d, access), ``TRADEOFF_COLUMNS`` keys.
+
+    ``hidden_sizes`` sweeps the MLP width — and therefore d — to
+    expose FedScalar's dimension-free upload against the baselines'
+    Θ(d) scaling.  N = ``num_clients`` at full participation is the
+    paper's §III setup, so every run rides the engine's fused fast
+    path (bit-identical to the ``core`` round functions).
+    """
+    from repro.core.projection import tree_size
+    from repro.data import (
+        load_digits,
+        make_client_datasets,
+        train_test_split_arrays,
+    )
+    from repro.fed.runtime import RuntimeConfig, run_federation
+    from repro.models.mlp_classifier import init_mlp
+
+    x, y = load_digits()
+    xtr, ytr, xte, yte = train_test_split_arrays(x, y)
+    clients = make_client_datasets(xtr, ytr, num_clients)
+
+    rows = []
+    for hidden in hidden_sizes:
+        sizes = (64,) + tuple(hidden) + (10,)
+        p0 = init_mlp(sizes=sizes, seed=seed)
+        d = tree_size(p0)
+        for proto in protocols:
+            cfg = RuntimeConfig(
+                rounds=rounds, population=num_clients, participation=1.0,
+                protocol_name=proto, seed=seed,
+                channel=ChannelConfig(bandwidth_bps=bandwidth_bps,
+                                      num_clients=num_clients))
+            h = run_federation(cfg, p0, clients, xte, yte)
+            for acc_mode in access:
+                ch = dataclasses.replace(cfg.channel, access=acc_mode)
+                bits, wall, energy = _cost_totals(
+                    ch, h["bits_per_client_per_round"], rounds, num_clients,
+                    d, seed)
+                hm = dict(h, cum_bits=bits, cum_wall_s=wall,
+                          cum_energy_j=energy)
+                rows.append(dict(
+                    protocol=proto,
+                    access=acc_mode,
+                    d=d,
+                    bits_per_client_per_round=int(h["bits_per_client_per_round"]),
+                    rounds=rounds,
+                    final_accuracy=float(h["accuracy"][-1]),
+                    total_uplink_bits=float(bits[-1]),
+                    total_wall_s=float(wall[-1]),
+                    total_energy_j=float(energy[-1]),
+                    acc_at_1e6_bits=_acc_at(hm, "cum_bits", _BITS_BUDGET),
+                    acc_at_1250_s=_acc_at(hm, "cum_wall_s", _WALL_BUDGET),
+                    acc_at_50_j=_acc_at(hm, "cum_energy_j", _ENERGY_BUDGET),
+                ))
+    return rows
+
+
+def write_tradeoff_csv(rows: list[dict], path: str = TRADEOFF_CSV) -> str:
+    """Write the sweep rows → ``path`` (report §Baselines artifact)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(TRADEOFF_COLUMNS) + "\n")
+        for r in rows:
+            vals = []
+            for c in TRADEOFF_COLUMNS:
+                v = r[c]
+                vals.append(f"{v:.6g}" if isinstance(v, float) else str(v))
+            f.write(",".join(vals) + "\n")
+    return path

@@ -26,7 +26,15 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ChannelConfig", "CostModel", "upload_bits", "table1_upload_times"]
+__all__ = [
+    "ChannelConfig",
+    "CostModel",
+    "upload_bits",
+    "dense_upload_bits",
+    "quantized_upload_bits",
+    "replay_round_costs",
+    "table1_upload_times",
+]
 
 
 def upload_bits(num_blocks: int = 1, scalar_bits: int = 32,
@@ -41,6 +49,29 @@ def upload_bits(num_blocks: int = 1, scalar_bits: int = 32,
     .bits_per_upload`` both delegate here.
     """
     return num_blocks * scalar_bits + seed_bits
+
+
+def dense_upload_bits(d: int, value_bits: int = 32) -> int:
+    """FedAvg-style dense frame: d values at full width (paper: d·32).
+
+    Single source of the dense payload formula — the ``fedavg``
+    protocol's wire codec and ``repro.core.fedavg.upload_bits_per_
+    client`` both delegate here, so Table I and the runtime's per-round
+    accounting cannot drift apart.
+    """
+    return d * value_bits
+
+
+def quantized_upload_bits(d: int, bits: int, num_norms: int = 1,
+                          norm_bits: int = 32) -> int:
+    """QSGD-style frame: d level codes at ``bits`` + the L2 norms.
+
+    The paper's flat-vector formula is ``d·bits + 32`` (one norm); the
+    deployed per-tensor quantizer carries one norm per leaf, hence
+    ``num_norms``.  Single source for the ``qsgd`` protocol's wire
+    codec and ``repro.core.qsgd.upload_bits_per_client``.
+    """
+    return d * bits + num_norms * norm_bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +158,29 @@ class CostModel:
             upload_s = float(np.max(clipped))
         energy = float(self.ch.p_tx_watts * np.sum(tx))
         return float(n * bits_per_client), self.t_other + upload_s, energy
+
+
+def replay_round_costs(channel: ChannelConfig, bits_per_upload: int,
+                       rounds: int, num_clients: int,
+                       fedavg_bits_per_client: int, rng_seed: int = 0):
+    """Per-round (bits, wall, energy) of K full-cohort homogeneous rounds.
+
+    One lognormal latency draw per upload per round, aggregated by
+    :meth:`CostModel.cohort_round_cost` — the **single source** of the
+    engine's fused-path accounting (``repro.fed.runtime.engine._run_
+    fused``) and the baseline trade-off sweep's access-scheme replay
+    (``repro.fed.baselines``): same ``rng_seed`` → identical draws, so
+    the two cannot drift.  → three ``(rounds,)`` arrays (not cumsum'd).
+    """
+    cm = CostModel(channel, fedavg_bits_per_client=fedavg_bits_per_client,
+                   rng_seed=rng_seed)
+    bits = np.zeros(rounds)
+    wall = np.zeros(rounds)
+    energy = np.zeros(rounds)
+    for k in range(rounds):
+        lat = cm.per_client_upload_seconds(bits_per_upload, num_clients)
+        bits[k], wall[k], energy[k] = cm.cohort_round_cost(lat, bits_per_upload)
+    return bits, wall, energy
 
 
 def table1_upload_times(

@@ -1,0 +1,311 @@
+"""Uplink protocol abstraction: one engine, three wire disciplines.
+
+The paper's headline claim (eqs. 12–13, Table I) is *systemic*:
+FedScalar's dimension-free upload beats FedAvg and QSGD on wall-clock
+and energy under bandwidth constraints.  Reproducing that comparison
+end-to-end requires all three methods to run through the same
+event-driven runtime — same cohort sampler, same lossy channel, same
+deadline/staleness server, same cost model — differing only in what a
+client puts on the wire and how the server folds it in.  This module
+is that seam (DESIGN.md §8).
+
+An :class:`UplinkProtocol` answers three questions:
+
+* **client_payload** — given a client's local update δ, what float32
+  payload vector rides the uplink?  (fedscalar: the k projection
+  scalars; fedavg: δ itself; qsgd: signed level codes + per-leaf
+  norms.)
+* **wire_codec** — how do those payloads serialize, and how many bits
+  is one upload?  Each codec's ``bits_per_upload`` delegates to the
+  matching :mod:`repro.fed.costmodel` formula (``upload_bits`` /
+  ``dense_upload_bits`` / ``quantized_upload_bits``), the single
+  sources behind Table I.
+* **server_apply** — given the round's surviving payloads and their
+  IPW×staleness coefficients, how does the model move?  ``weights=
+  None`` is the paper's uniform mean — for the dense protocols that
+  path is **bit-identical** to ``repro.core.fedavg.fedavg_round`` /
+  ``repro.core.qsgd.qsgd_round`` (asserted in
+  ``tests/test_protocol_parity.py``); the weighted path carries the
+  runtime's Horvitz–Thompson coefficients.
+
+``fedscalar`` composes the existing ``client_stage`` /
+``server_aggregate`` building blocks unchanged — the protocol route is
+bit-identical to the pre-abstraction engine by construction, including
+the fused-kernel and mesh-sharded applies.  The dense protocols
+deliberately cannot take the mesh path: reconstructing from a dense
+frame on a sharded server needs a d-sized gather of the frame to every
+model shard, exactly the communication FedScalar's seed-regenerated
+directions avoid (DESIGN §2/§8).
+
+Shapes/dtypes: payloads are float32 ``(C, payload_dim)`` with uint32
+``(C,)`` seeds (zeros for seedless frames); ``server_apply`` accepts
+``(A, payload_dim)`` survivors plus optional float32 ``(A,)`` weights
+and returns params in their own dtypes.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedavg as fa
+from repro.core import fedscalar as fs
+from repro.core import qsgd as q
+from repro.core.projection import leaf_layout, tree_size
+from repro.fed.runtime.transport import (
+    DenseFrameCodec,
+    QuantizedFrameCodec,
+    WireFormat,
+)
+
+__all__ = [
+    "UplinkProtocol",
+    "FedScalarProtocol",
+    "FedAvgProtocol",
+    "QSGDProtocol",
+    "PROTOCOLS",
+    "make_protocol",
+]
+
+
+class UplinkProtocol(abc.ABC):
+    """What one federated method contributes to the shared engine."""
+
+    name: str
+
+    #: frame codec (WireFormat / DenseFrameCodec / QuantizedFrameCodec)
+    wire_codec: Any
+
+    @property
+    def payload_dim(self) -> int:
+        return self.wire_codec.payload_dim
+
+    @property
+    def upload_bits(self) -> int:
+        """Uplink bits per client per round (costmodel single source)."""
+        return self.wire_codec.bits_per_upload
+
+    @abc.abstractmethod
+    def client_payload(self, delta: Any, seed) -> jax.Array:
+        """One client's update pytree → float32 ``(payload_dim,)``.
+
+        ``seed`` is the per-(round, client) stream seed the engine
+        derived for this upload; protocols that key their own streams
+        (qsgd's rounding uniforms) re-salt it internally.  Traced
+        inside the engine's jitted client chunk.
+        """
+
+    def encode_cohort(self, deltas: Any, seeds: jax.Array,
+                      round_idx, client_ids: jax.Array) -> jax.Array:
+        """Vectorized encode: deltas with leading C axis → (C, payload_dim).
+
+        Default: vmap :meth:`client_payload` over the engine's
+        projection seeds; protocols with their own seed chains override.
+        """
+        del round_idx, client_ids
+        return jax.vmap(self.client_payload)(deltas, seeds)
+
+    @abc.abstractmethod
+    def server_apply(self, params: Any, payloads: jax.Array,
+                     seeds: jax.Array | None,
+                     weights: jax.Array | None) -> Any:
+        """Fold the round's surviving frames into the model.
+
+        ``weights=None`` → the paper's uniform mean over the A frames
+        (cohort fully arrived); else ĝ = Σᵢ wᵢ·decode(frameᵢ) with the
+        runtime's IPW×staleness coefficients.
+        """
+
+
+# ---------------------------------------------------------------------------
+# fedscalar — the existing (r, ξ) path, bit-identical by construction
+# ---------------------------------------------------------------------------
+
+
+class FedScalarProtocol(UplinkProtocol):
+    """The paper's protocol: k scalars + a 32-bit seed, O(1) uplink.
+
+    Thin composition of the existing building blocks — ``client_stage``
+    for encode, ``server_aggregate`` (fori / fused Pallas kernel /
+    mesh-sharded shard_map) for apply — so routing the engine through
+    the protocol interface changes no traced graph.
+    """
+
+    name = "fedscalar"
+
+    def __init__(self, params_like: Any, config: fs.FedScalarConfig,
+                 wire: WireFormat | None = None):
+        self.config = config
+        self.wire_codec = wire if wire is not None else WireFormat(
+            num_projections=config.num_projections)
+
+    @classmethod
+    def build(cls, params_like, *, fedscalar_config=None, wire_format=None,
+              **_ignored):
+        cfg = fedscalar_config if fedscalar_config is not None else fs.FedScalarConfig()
+        return cls(params_like, cfg, wire_format)
+
+    def client_payload(self, delta, seed):
+        r, _ = fs.client_stage(delta, seed, self.config)
+        return r
+
+    def server_apply(self, params, payloads, seeds, weights, *,
+                     use_kernel: bool = False, mesh=None):
+        if mesh is not None:
+            return fs.server_aggregate_mesh(
+                params, payloads, seeds, self.config, mesh, weights=weights)
+        if use_kernel:
+            from repro.kernels import ops
+            return ops.server_update_kernel(
+                params, payloads, seeds, server_lr=self.config.server_lr,
+                distribution=self.config.distribution, weights=weights,
+                mode=self.config.mode)
+        return fs.server_aggregate(params, payloads, seeds, self.config,
+                                   weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# dense-frame base: shared unflatten + weighted/uniform apply
+# ---------------------------------------------------------------------------
+
+
+class _DenseApplyMixin:
+    """Unflatten (A, d) frames to per-leaf stacks and apply the mean.
+
+    Per-leaf ``jnp.mean(·, axis=0)`` on the unflattened stacks is the
+    *same op on the same values* as the core round functions' tree_map
+    mean — the root of the bit-identity contract.
+    """
+
+    def _layout(self, params_like):
+        self.layout = leaf_layout(params_like)
+        self.d = tree_size(params_like)
+
+    def _leaf_stacks(self, flat: jax.Array):
+        """(A, d) float32 → list of (A, *leaf_shape) float32 views."""
+        return [flat[:, ll.offset:ll.end].reshape((flat.shape[0],) + ll.shape)
+                for ll in self.layout]
+
+    def _apply_mean(self, params, leaf_stacks, weights, server_lr):
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = []
+        for p, stack in zip(leaves, leaf_stacks):
+            if weights is None:
+                g = jnp.mean(stack, axis=0)
+            else:
+                w = weights.astype(jnp.float32).reshape(
+                    (-1,) + (1,) * (stack.ndim - 1))
+                g = jnp.sum(stack * w, axis=0)
+            out.append((p + server_lr * g).astype(p.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class FedAvgProtocol(_DenseApplyMixin, UplinkProtocol):
+    """FedAvg (McMahan et al., 2017): the full δ on the wire, Θ(d) bits."""
+
+    name = "fedavg"
+
+    def __init__(self, params_like: Any, config: fa.FedAvgConfig,
+                 scalar: str = "fp32"):
+        self.config = config
+        self._layout(params_like)
+        self.wire_codec = DenseFrameCodec(self.d, scalar=scalar)
+
+    @classmethod
+    def build(cls, params_like, *, fedavg_config=None, scalar_format="fp32",
+              **_ignored):
+        cfg = fedavg_config if fedavg_config is not None else fa.FedAvgConfig()
+        return cls(params_like, cfg, scalar=scalar_format)
+
+    def client_payload(self, delta, seed):
+        del seed                       # dense frames are seedless
+        leaves = jax.tree_util.tree_leaves(delta)
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+    def server_apply(self, params, payloads, seeds, weights):
+        del seeds
+        stacks = self._leaf_stacks(payloads.astype(jnp.float32))
+        return self._apply_mean(params, stacks, weights, self.config.server_lr)
+
+
+class QSGDProtocol(_DenseApplyMixin, UplinkProtocol):
+    """QSGD (Alistarh et al., 2017): signed level codes + per-leaf norms.
+
+    Encode runs the same counter-based stochastic rounding as
+    :func:`repro.core.qsgd.quantize_tree` (and therefore the Pallas
+    kernel / jnp oracle pair of :mod:`repro.kernels`), keyed by
+    (round, client id); decode multiplies the levels back by
+    norm/levels, which is bit-identical to the client-side round-trip
+    value.  The uniform-mean apply thus reproduces ``qsgd_round``
+    exactly on the same cohort.
+    """
+
+    name = "qsgd"
+
+    def __init__(self, params_like: Any, config: q.QSGDConfig):
+        self.config = config
+        self._layout(params_like)
+        self.num_leaves = len(self.layout)
+        self.wire_codec = QuantizedFrameCodec(
+            self.d, num_norms=self.num_leaves, bits=config.bits,
+            norm_bits=config.norm_bits)
+
+    @classmethod
+    def build(cls, params_like, *, qsgd_config=None, **_ignored):
+        cfg = qsgd_config if qsgd_config is not None else q.QSGDConfig()
+        return cls(params_like, cfg)
+
+    def client_payload(self, delta, quant_seed):
+        levels = self.config.levels
+        parts, norms = [], []
+        for tag, leaf in enumerate(jax.tree_util.tree_leaves(delta)):
+            signed, norm = q.quantize_levels(leaf, quant_seed, levels, tag)
+            parts.append(signed.reshape(-1))
+            norms.append(norm)
+        return jnp.concatenate(parts + [jnp.stack(norms)])
+
+    def encode_cohort(self, deltas, seeds, round_idx, client_ids):
+        del seeds                      # rounding streams are (round, id)-keyed
+        qseeds = q.quant_seeds(round_idx, client_ids)
+        return jax.vmap(self.client_payload)(deltas, qseeds)
+
+    def server_apply(self, params, payloads, seeds, weights):
+        del seeds
+        levels = self.config.levels
+        flat = payloads.astype(jnp.float32)
+        norms = flat[:, self.d:]                       # (A, num_leaves)
+        stacks = []
+        for tag, ll in enumerate(self.layout):
+            lv = flat[:, ll.offset:ll.end].reshape((flat.shape[0],) + ll.shape)
+            nb = norms[:, tag].reshape((-1,) + (1,) * len(ll.shape))
+            # norm · signed_level / levels — the exact client round-trip
+            # value (multiplication by the folded-in ±1 sign is exact).
+            stacks.append(nb * lv / jnp.float32(levels))
+        return self._apply_mean(params, stacks, weights, self.config.server_lr)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+PROTOCOLS: dict[str, Callable] = {
+    FedScalarProtocol.name: FedScalarProtocol,
+    FedAvgProtocol.name: FedAvgProtocol,
+    QSGDProtocol.name: QSGDProtocol,
+}
+
+
+def make_protocol(name: str, params_like: Any, **kwargs) -> UplinkProtocol:
+    """Build a registered protocol by name.
+
+    ``kwargs`` are the union of every protocol's build options
+    (``fedscalar_config``/``wire_format``, ``fedavg_config``/
+    ``scalar_format``, ``qsgd_config``); each build ignores what it
+    does not consume, so the engine can pass one bundle.
+    """
+    if name not in PROTOCOLS:
+        raise ValueError(f"unknown protocol {name!r}; registered: {sorted(PROTOCOLS)}")
+    return PROTOCOLS[name].build(params_like, **kwargs)

@@ -18,20 +18,35 @@ float pytree and are only touched at the single per-round apply.
 * :mod:`sampling`  — client-population registry + per-round cohort
   sampling (uniform / weighted / Poisson) with inverse-probability
   reweighting so ĝ stays unbiased under partial participation,
-* :mod:`transport` — the actual wire: (r, ξ) serialized to bytes at a
-  configurable scalar width, a downlink broadcast channel, and
-  loss/latency driven by :class:`repro.fed.costmodel.ChannelConfig`,
-* :mod:`server`    — a streaming aggregator with O(1) state per client,
-  deadline-based round close and staleness-weighted async aggregation,
+* :mod:`transport` — the actual wire: protocol frames (scalar / dense /
+  quantized — DESIGN §8) serialized to bytes, a downlink broadcast
+  channel, and loss/latency driven by
+  :class:`repro.fed.costmodel.ChannelConfig`,
+* :mod:`server`    — a streaming aggregator with O(payload) state per
+  client, deadline-based round close and staleness-weighted async
+  aggregation,
 * :mod:`engine`    — the round driver: batches cohort members through
-  the ``fedscalar_round`` building blocks and routes large cohorts
-  through the fused Pallas reconstruction kernel.
+  the shared local-SGD building block, lets the configured
+  :class:`repro.fed.protocols.UplinkProtocol` encode/apply, and routes
+  large fedscalar cohorts through the fused Pallas reconstruction
+  kernel.
+
+The protocol registry itself lives one level up in
+:mod:`repro.fed.protocols` (``fedscalar`` / ``fedavg`` / ``qsgd``) —
+``RuntimeConfig.protocol_name`` selects the wire discipline while
+everything else in this package is shared.
 """
-from repro.fed.runtime.engine import RuntimeConfig, run_federation
+from repro.fed.runtime.engine import (
+    RuntimeConfig,
+    draw_cohort_batches,
+    run_federation,
+)
 from repro.fed.runtime.sampling import ClientPopulation, Cohort, CohortSampler
 from repro.fed.runtime.server import ServerConfig, StreamingAggregator, Upload
 from repro.fed.runtime.transport import (
     WireFormat,
+    DenseFrameCodec,
+    QuantizedFrameCodec,
     DownlinkBroadcast,
     UplinkChannel,
     decode_upload,
@@ -39,9 +54,10 @@ from repro.fed.runtime.transport import (
 )
 
 __all__ = [
-    "RuntimeConfig", "run_federation",
+    "RuntimeConfig", "run_federation", "draw_cohort_batches",
     "ClientPopulation", "Cohort", "CohortSampler",
     "ServerConfig", "StreamingAggregator", "Upload",
-    "WireFormat", "UplinkChannel", "DownlinkBroadcast",
+    "WireFormat", "DenseFrameCodec", "QuantizedFrameCodec",
+    "UplinkChannel", "DownlinkBroadcast",
     "encode_upload", "decode_upload",
 ]

@@ -1,35 +1,57 @@
 """Round driver: K server rounds over populations up to ~10⁵ clients.
 
+The engine is **protocol-pluggable** (DESIGN §8): every registered
+:class:`repro.fed.protocols.UplinkProtocol` — ``fedscalar`` (the
+paper's (r, ξ) two-scalar wire), ``fedavg`` (dense frames) and
+``qsgd`` (level-code + norm frames) — runs through the same cohort
+sampler, channel, streaming server and cost model, so the paper's
+system-level comparison (Table I, eqs. 12–13) is a configuration
+sweep, not three codebases.
+
 Per round the engine
 
   1. samples a cohort from the population registry (``sampling``),
   2. broadcasts the global model (downlink accounting),
   3. runs every cohort member's S local-SGD steps **in fixed-size
-     vmapped chunks** through the same ``make_local_sgd``/
-     ``client_stage`` building blocks the paper-scale simulation uses
-     (fixed chunk shape → one XLA compilation for any cohort size),
-  4. pushes each (r, ξ) upload through the byte-level wire codec and
-     the lossy/laggy channel (``transport``),
+     vmapped chunks** through the same ``make_local_sgd`` building
+     block all protocols share (fixed chunk shape → one XLA
+     compilation for any cohort size), then lets the protocol encode
+     each member's update into its wire payload,
+  4. pushes each frame through the protocol's byte-level wire codec
+     and the lossy/laggy channel (``transport``),
   5. lets the streaming aggregator close the round at the deadline
-     (``server``) and applies  x ← x + lr·Σᵢⱼ coeffᵢ·rᵢⱼ·vⱼ(ξᵢ)  — via
-     the fori-loop path, the fused Pallas reconstruction kernel with
-     its client-chunk **and block** grid dimensions (DESIGN §2/§6),
-     or — with ``mesh_shape`` set — the mesh-sharded apply where every
-     device of a (data, model) mesh rebuilds its own slice of the
-     direction chain with zero collectives (DESIGN §7),
-  6. charges the round to the bandwidth/energy cost model (bytes and
-     energy scale with k, the scalars-per-upload dial).
+     (``server``) and hands the surviving frames to the protocol's
+     ``server_apply`` — for ``fedscalar`` that is
+     x ← x + lr·Σᵢⱼ coeffᵢ·rᵢⱼ·vⱼ(ξᵢ) via the fori-loop path, the
+     fused Pallas reconstruction kernel with its client-chunk **and
+     block** grid dimensions (DESIGN §2/§6), or — with ``mesh_shape``
+     set — the mesh-sharded apply where every device of a
+     (data, model) mesh rebuilds its own slice of the direction chain
+     with zero collectives (DESIGN §7); for the dense protocols it is
+     the IPW-weighted frame mean (uniform full-arrival rounds use the
+     exact cohort mean, bit-identical to the ``core`` round functions
+     — ``tests/test_protocol_parity.py``),
+  6. charges the round to the bandwidth/energy cost model with the
+     protocol codec's ``bits_per_upload`` (8 bytes for the paper's
+     protocol, Θ(d) for the baselines — the whole point of Table I).
 
 The projection is pluggable (DESIGN §6): ``family`` selects any
 registered :class:`repro.core.directions.DirectionFamily` and
 ``num_projections``/``projection_mode`` set the k-block-scalar upload;
-uploads are float32 ``(C, k)`` with uint32 ``(C,)`` seeds throughout.
+uploads are float32 ``(C, payload_dim)`` with uint32 ``(C,)`` seeds
+throughout.
 
 Fast path: a fully-participating, synchronous, lossless, fp32
 configuration is *exactly* the paper's §III experiment, so the engine
-delegates it to ``run_simulation``'s single fused ``lax.scan`` — the
-trajectory is bit-for-bit identical to the small-scale path while the
-runtime keeps its own cost accounting.
+delegates it to ``run_simulation``'s single fused ``lax.scan`` — for
+``fedscalar`` the trajectory is bit-for-bit the small-scale path, and
+for ``fedavg``/``qsgd`` it is bit-for-bit the corresponding ``core``
+round functions — while the runtime keeps its own cost accounting.
+
+The dense protocols refuse ``mesh_shape``: serving a dense frame from
+a sharded model would need a d-sized gather of every frame to every
+model shard — exactly the communication the seed-regenerated
+direction chain avoids (DESIGN §8).
 """
 from __future__ import annotations
 
@@ -54,7 +76,7 @@ from repro.fed.runtime.sampling import (
 from repro.fed.runtime.server import ServerConfig, StreamingAggregator, Upload
 from repro.fed.runtime.transport import DownlinkBroadcast, UplinkChannel, WireFormat
 
-__all__ = ["RuntimeConfig", "run_federation"]
+__all__ = ["RuntimeConfig", "run_federation", "draw_cohort_batches"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +87,8 @@ class RuntimeConfig:
     population: int = 1000              # registered clients
     participation: float = 0.01         # expected sampled fraction per round
     sampler: str = "uniform"            # uniform | weighted | poisson
+    protocol_name: str = "fedscalar"    # registered uplink protocol
+                                        # (fedscalar | fedavg | qsgd, DESIGN §8)
     local_steps: int = 5                # S
     batch_size: int = 32
     local_lr: float = 3e-3              # α
@@ -75,15 +99,18 @@ class RuntimeConfig:
     num_projections: int = 1            # k scalars per upload
     projection_mode: str = "full"       # "full" (m full-d projections) or
                                         # "block" (k block scalars)
+    qsgd_bits: int = 8                  # level-code width of the qsgd protocol
     seed: int = 0
     scalar_format: str = "fp32"         # wire width of r (fp32 | fp16 | bf16)
     eval_every: int = 1
     client_chunk: int = 256             # cohort members per vmapped compute chunk
     kernel_cohort_threshold: int | None = None  # cohorts ≥ this → Pallas path
-                                                # (None: TPU only, CPU never)
+                                                # (None: TPU only, CPU never;
+                                                # fedscalar only)
     mesh_shape: tuple | None = None     # (data, model) device mesh for the
                                         # sharded server apply (DESIGN §7);
-                                        # None = single-device apply
+                                        # None = single-device apply;
+                                        # fedscalar only (DESIGN §8)
     server: ServerConfig = dataclasses.field(default_factory=ServerConfig)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
 
@@ -106,15 +133,65 @@ class RuntimeConfig:
         return WireFormat(scalar=self.scalar_format,
                           num_projections=self.num_projections)
 
+    def build_protocol(self, params_like):
+        """→ the configured :class:`repro.fed.protocols.UplinkProtocol`."""
+        from repro.core import fedavg as fa
+        from repro.core import qsgd as q
+        from repro.fed.protocols import make_protocol
+
+        base = dict(local_steps=self.local_steps, local_lr=self.local_lr,
+                    server_lr=self.server_lr)
+        return make_protocol(
+            self.protocol_name, params_like,
+            fedscalar_config=self.protocol(), wire_format=self.wire(),
+            fedavg_config=fa.FedAvgConfig(**base),
+            scalar_format=self.scalar_format,
+            qsgd_config=q.QSGDConfig(bits=self.qsgd_bits, **base))
+
     def cohort_size(self) -> int:
         return max(1, int(round(self.participation * self.population)))
 
 
-def _is_fused_equivalent(cfg: RuntimeConfig, num_shards: int) -> bool:
-    """True iff the config degenerates to the paper-scale simulation."""
+def draw_cohort_batches(cx, cy, num_shards: int, seed: int, round_idx,
+                        client_ids, local_steps: int, batch_size: int):
+    """Deterministic per-(round, client) minibatch streams for a cohort.
+
+    ``cx``/``cy`` are the stacked client shards (#shards, n_per, ...);
+    client n reads shard n mod #shards.  The stream is a pure function
+    of (run seed, round, client id) — independent of cohort makeup —
+    and this function is the **single source** of the engine's batch
+    draw: the parity tests replay it so the reference ``core`` round
+    functions consume the exact batches the engine computed
+    (``tests/test_protocol_parity.py``).
+
+    → ``(bx, by)`` with shapes ``(C, S, B, feat...)`` / ``(C, S, B)``.
+    """
+    n_per = cx.shape[1]
+    S, B = local_steps, batch_size
+    shard = (client_ids % num_shards).astype(jnp.int32)
+    sx = cx[shard]                            # (C, n_per, feat)
+    sy = cy[shard]
+
+    def draw(cid):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), round_idx), cid)
+        return jax.random.randint(key, (S, B), 0, n_per)
+
+    idx = jax.vmap(draw)(client_ids)          # (C, S, B)
+    chunk = client_ids.shape[0]
+    bx = jnp.take_along_axis(
+        sx[:, :, None, :], idx.reshape(chunk, S * B, 1, 1), axis=1
+    ).reshape((chunk, S, B) + sx.shape[2:])
+    by = jnp.take_along_axis(
+        sy, idx.reshape(chunk, S * B), axis=1).reshape(chunk, S, B)
+    return bx, by
+
+
+def _fused_method(cfg: RuntimeConfig, num_shards: int) -> str | None:
+    """→ the ``run_simulation`` method iff the config degenerates to it."""
     from repro.fed.simulation import METHOD_FOR_DISTRIBUTION
 
-    return (
+    base = (
         cfg.participation == 1.0
         and cfg.sampler in ("uniform", "weighted")
         and cfg.mesh_shape is None     # sharded apply never takes the shortcut
@@ -124,10 +201,19 @@ def _is_fused_equivalent(cfg: RuntimeConfig, num_shards: int) -> bool:
         and cfg.channel.drop_prob == 0.0
         and cfg.channel.base_latency_s == 0.0
         and cfg.scalar_format == "fp32"
-        and cfg.num_projections == 1
         and cfg.server_lr == 1.0
-        and cfg.resolved_distribution() in METHOD_FOR_DISTRIBUTION
     )
+    if not base:
+        return None
+    if cfg.protocol_name == "fedavg":
+        return "fedavg"
+    if cfg.protocol_name == "qsgd":
+        # run_simulation's QSGDConfig carries the paper's 8-bit point.
+        return "qsgd" if cfg.qsgd_bits == 8 else None
+    if (cfg.num_projections == 1
+            and cfg.resolved_distribution() in METHOD_FOR_DISTRIBUTION):
+        return METHOD_FOR_DISTRIBUTION[cfg.resolved_distribution()]
+    return None
 
 
 def _pad_pow2(n: int, lo: int = 16) -> int:
@@ -136,6 +222,28 @@ def _pad_pow2(n: int, lo: int = 16) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _pad_bucket(ars: np.ndarray, acoeffs: np.ndarray,
+                aseeds: np.ndarray | None = None):
+    """Zero-pad the round-close buffers to a power-of-two bucket.
+
+    Shared by the fedscalar and dense weighted applies so the padding
+    convention (bucket sizing, dtypes, zero weights → zero
+    contribution) cannot diverge between the two paths.
+    → ``(rs_b, w_b)`` or ``(rs_b, w_b, seeds_b)`` when seeds are given.
+    """
+    a = len(acoeffs)
+    bucket = _pad_pow2(a)
+    rs_b = np.zeros((bucket, ars.shape[1]), np.float32)
+    rs_b[:a] = ars
+    w_b = np.zeros(bucket, np.float32)
+    w_b[:a] = acoeffs.astype(np.float32)
+    if aseeds is None:
+        return rs_b, w_b
+    seeds_b = np.zeros(bucket, np.uint32)
+    seeds_b[:a] = aseeds
+    return rs_b, w_b, seeds_b
 
 
 def run_federation(
@@ -168,17 +276,22 @@ def run_federation(
     loss_fn, acc_fn = eval_fns
 
     num_shards = len(client_sets)
-    pcfg = cfg.protocol()
-    fmt = cfg.wire()
+    proto = cfg.build_protocol(init_params)
+    codec = proto.wire_codec
     d = tree_size(init_params)
+    if proto.name != "fedscalar" and cfg.mesh_shape is not None:
+        raise ValueError(
+            f"protocol {proto.name!r} cannot use mesh_shape: dense frames "
+            "need a d-sized gather per upload on a sharded server "
+            "(DESIGN §8); only fedscalar decodes shard-locally")
 
-    if _is_fused_equivalent(cfg, num_shards):
-        return _run_fused(cfg, init_params, client_sets, x_test, y_test, fmt, d)
+    method = _fused_method(cfg, num_shards)
+    if method is not None:
+        return _run_fused(cfg, init_params, client_sets, x_test, y_test,
+                          method, codec.bits_per_upload, d)
 
     cx, cy = _stack_clients(client_sets)          # (#shards, n_per, feat...)
-    n_per = cx.shape[1]
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
-    S, B = cfg.local_steps, cfg.batch_size
 
     if client_weights is None and cfg.sampler == "weighted":
         # default PPS weights: the shard size behind each virtual client
@@ -189,47 +302,46 @@ def run_federation(
                             seed=cfg.seed)
     cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
                    rng_seed=cfg.seed)
-    uplink = UplinkChannel(cm, fmt)
+    uplink = UplinkChannel(cm, codec)
     downlink = DownlinkBroadcast(d, cfg.channel.float_bits)
     agg = StreamingAggregator(cfg.server)
 
     local = fs.make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
 
-    # ---- jitted fixed-shape chunk: C_chunk clients' local rounds → rs ----
+    # ---- jitted fixed-shape chunk: C_chunk clients' local rounds → frames ----
     @jax.jit
-    def chunk_rs(params, round_idx, client_ids):
-        shard = (client_ids % num_shards).astype(jnp.int32)
-        sx = cx[shard]                            # (chunk, n_per, feat)
-        sy = cy[shard]
-        # per-(round, client) minibatch streams — independent of cohort makeup
-        def draw(cid):
-            key = jax.random.fold_in(
-                jax.random.fold_in(jax.random.PRNGKey(cfg.seed), round_idx), cid)
-            return jax.random.randint(key, (S, B), 0, n_per)
-        idx = jax.vmap(draw)(client_ids)          # (chunk, S, B)
-        chunk = client_ids.shape[0]
-        bx = jnp.take_along_axis(
-            sx[:, :, None, :], idx.reshape(chunk, S * B, 1, 1), axis=1
-        ).reshape((chunk, S, B) + sx.shape[2:])
-        by = jnp.take_along_axis(
-            sy, idx.reshape(chunk, S * B), axis=1).reshape(chunk, S, B)
+    def chunk_payloads(params, round_idx, client_ids):
+        bx, by = draw_cohort_batches(cx, cy, num_shards, cfg.seed, round_idx,
+                                     client_ids, cfg.local_steps,
+                                     cfg.batch_size)
         seeds = fs.round_seeds_for(round_idx, client_ids)
         deltas = jax.vmap(local, in_axes=(None, 0))(params, (bx, by))
-        rs, _ = jax.vmap(lambda dl, sd: fs.client_stage(dl, sd, pcfg))(deltas, seeds)
-        return rs, seeds
+        payloads = proto.encode_cohort(deltas, seeds, round_idx, client_ids)
+        return payloads, seeds
 
-    # ---- jitted weighted server updates (bucketed shapes) ----
-    @jax.jit
-    def apply_fori(params, rs, seeds, weights):
-        return fs.server_aggregate(params, rs, seeds, pcfg, weights=weights)
+    # ---- jitted server applies (bucketed shapes) ----
+    if proto.name == "fedscalar":
+        @jax.jit
+        def apply_fori(params, rs, seeds, weights):
+            return proto.server_apply(params, rs, seeds, weights)
 
-    @jax.jit
-    def apply_kernel(params, rs, seeds, weights):
-        from repro.kernels import ops
-        return ops.server_update_kernel(
-            params, rs, seeds,
-            server_lr=cfg.server_lr, distribution=pcfg.distribution,
-            weights=weights, mode=pcfg.mode)
+        @jax.jit
+        def apply_kernel(params, rs, seeds, weights):
+            return proto.server_apply(params, rs, seeds, weights,
+                                      use_kernel=True)
+    else:
+        # Dense protocols: the uniform-mean path is the exact paper
+        # aggregation (→ bit-identity with the core round functions on
+        # full-arrival uniform cohorts); the weighted path carries the
+        # runtime's IPW×staleness coefficients over a padded bucket
+        # (zero-weight rows decode to zero contribution).
+        @jax.jit
+        def apply_mean(params, frames):
+            return proto.server_apply(params, frames, None, None)
+
+        @jax.jit
+        def apply_weighted(params, frames, weights):
+            return proto.server_apply(params, frames, None, weights)
 
     kern_thresh = cfg.kernel_cohort_threshold
     if kern_thresh is None:
@@ -257,8 +369,7 @@ def run_federation(
         # fed_rules.sharded_apply_blocks and skips that round-trip.
         @jax.jit
         def apply_mesh(params, rs, seeds, weights):
-            return fs.server_aggregate_mesh(
-                params, rs, seeds, pcfg, mesh, weights=weights)
+            return proto.server_apply(params, rs, seeds, weights, mesh=mesh)
 
     @jax.jit
     def evaluate(params):
@@ -283,7 +394,7 @@ def run_federation(
         # --- client compute, fixed-shape chunks (pad by repeating id 0) ---
         ids = cohort.client_ids
         c = len(ids)
-        rs_np = np.zeros((max(c, 1), cfg.num_projections), np.float32)
+        rs_np = np.zeros((max(c, 1), proto.payload_dim), np.float32)
         seeds_np = np.zeros(max(c, 1), np.uint32)
         chunk = cfg.client_chunk
         for lo in range(0, c, chunk):
@@ -291,8 +402,8 @@ def run_federation(
             padded = np.zeros(chunk, np.int64) if len(part) < chunk else part
             if len(part) < chunk:
                 padded[:len(part)] = part
-            rs_c, seeds_c = chunk_rs(params, jnp.uint32(k),
-                                     jnp.asarray(padded, jnp.uint32))
+            rs_c, seeds_c = chunk_payloads(params, jnp.uint32(k),
+                                           jnp.asarray(padded, jnp.uint32))
             rs_np[lo:lo + len(part)] = np.asarray(rs_c)[:len(part)]
             seeds_np[lo:lo + len(part)] = np.asarray(seeds_c)[:len(part)]
 
@@ -308,23 +419,28 @@ def run_federation(
         aseeds, acoeffs, ars, st = agg.close_round(k)
         a = len(aseeds)
         if a and not st.skipped:
-            bucket = _pad_pow2(a)
-            seeds_b = np.zeros(bucket, np.uint32)
-            seeds_b[:a] = aseeds
-            rs_b = np.zeros((bucket, ars.shape[1]), np.float32)
-            rs_b[:a] = ars
-            w_b = np.zeros(bucket, np.float32)
-            w_b[:a] = acoeffs.astype(np.float32)
-            use_kernel = (kern_thresh is not None and a >= kern_thresh
-                          and (cfg.num_projections == 1
-                               or cfg.projection_mode == "block"))
-            if mesh is not None:
-                applier = apply_mesh
-            else:
-                applier = apply_kernel if use_kernel else apply_fori
             t_apply = time.time()
-            params = applier(params, jnp.asarray(rs_b), jnp.asarray(seeds_b),
-                             jnp.asarray(w_b))
+            if proto.name == "fedscalar":
+                rs_b, w_b, seeds_b = _pad_bucket(ars, acoeffs, aseeds)
+                use_kernel = (kern_thresh is not None and a >= kern_thresh
+                              and (cfg.num_projections == 1
+                                   or cfg.projection_mode == "block"))
+                if mesh is not None:
+                    applier = apply_mesh
+                else:
+                    applier = apply_kernel if use_kernel else apply_fori
+                params = applier(params, jnp.asarray(rs_b),
+                                 jnp.asarray(seeds_b), jnp.asarray(w_b))
+            else:
+                uniform_exact = (cfg.sampler == "uniform" and a == c
+                                 and st.applied_stale == 0
+                                 and bool(np.all(acoeffs == acoeffs[0])))
+                if uniform_exact:
+                    params = apply_mean(params, jnp.asarray(ars))
+                else:
+                    rs_b, w_b = _pad_bucket(ars, acoeffs)
+                    params = apply_weighted(params, jnp.asarray(rs_b),
+                                            jnp.asarray(w_b))
             jax.block_until_ready(jax.tree_util.tree_leaves(params))
             hist["apply_s"][k] = time.time() - t_apply
 
@@ -337,7 +453,7 @@ def run_federation(
                       and math.isfinite(cfg.server.round_period_s))
         if c:
             bits, wall, energy = cm.cohort_round_cost(
-                tx.latency_s, fmt.bits_per_upload, deadline_s=deadline)
+                tx.latency_s, codec.bits_per_upload, deadline_s=deadline)
         else:
             bits, energy, wall = 0.0, 0.0, cm.t_other
         if async_mode:
@@ -370,9 +486,10 @@ def run_federation(
 
     return dict(
         method=f"runtime_{cfg.sampler}",
+        protocol=proto.name,
         round=np.arange(1, K + 1),
         final_params=params,
-        bits_per_client_per_round=fmt.bits_per_upload,
+        bits_per_client_per_round=codec.bits_per_upload,
         sim_compute_seconds=time.time() - t0,
         fused_path=False,
         pending_rounds=agg.pending_rounds(),
@@ -384,38 +501,32 @@ def run_federation(
 
 
 def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
-               fmt: WireFormat, d: int) -> dict:
+               method: str, bits_per_upload: int, d: int) -> dict:
     """Full-participation sync path → one fused ``lax.scan``.
 
     Delegates to :func:`repro.fed.simulation.run_simulation`, so the
-    trajectory is bit-for-bit the paper-scale experiment; only the cost
-    accounting is redone with the runtime's per-upload channel draws.
+    trajectory is bit-for-bit the paper-scale experiment — for
+    ``fedavg``/``qsgd`` that means bit-for-bit the ``core`` round
+    functions; only the cost accounting is redone with the runtime's
+    per-upload channel draws.
     """
-    from repro.fed.simulation import (
-        METHOD_FOR_DISTRIBUTION,
-        SimulationConfig,
-        run_simulation,
-    )
+    from repro.fed.costmodel import replay_round_costs
+    from repro.fed.simulation import SimulationConfig, run_simulation
 
-    method = METHOD_FOR_DISTRIBUTION[cfg.resolved_distribution()]
     sim = SimulationConfig(
         method=method, rounds=cfg.rounds, num_clients=cfg.population,
         local_steps=cfg.local_steps, batch_size=cfg.batch_size,
         local_lr=cfg.local_lr, seed=cfg.seed, channel=cfg.channel)
     h = run_simulation(sim, init_params, client_sets, x_test, y_test)
 
-    cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
-                   rng_seed=cfg.seed)
     K, n = cfg.rounds, cfg.population
-    bits = np.zeros(K)
-    wall = np.zeros(K)
-    energy = np.zeros(K)
-    for k in range(K):
-        lat = cm.per_client_upload_seconds(fmt.bits_per_upload, n)
-        bits[k], wall[k], energy[k] = cm.cohort_round_cost(lat, fmt.bits_per_upload)
+    bits, wall, energy = replay_round_costs(
+        cfg.channel, bits_per_upload, K, n,
+        fedavg_bits_per_client=d * cfg.channel.float_bits, rng_seed=cfg.seed)
 
     h.update(
         method=f"runtime_{cfg.sampler}_fused",
+        protocol=cfg.protocol_name,
         cum_bits=np.cumsum(bits),
         cum_downlink_bits=np.cumsum(np.full(K, float(d * cfg.channel.float_bits))),
         cum_wall_s=np.cumsum(wall),
@@ -428,7 +539,7 @@ def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
         dropped_stale=np.zeros(K),
         weight_sum=np.ones(K),
         apply_s=np.zeros(K),
-        bits_per_client_per_round=fmt.bits_per_upload,
+        bits_per_client_per_round=bits_per_upload,
         fused_path=True,
         pending_rounds=[],
         sharding=None,

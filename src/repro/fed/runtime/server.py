@@ -1,14 +1,18 @@
-"""Server round state machine: streaming O(1)-per-client aggregation.
+"""Server round state machine: streaming per-upload aggregation.
 
-The FedScalar server never needs a client's d-dimensional update — an
-upload is two scalars, so the whole server-side round state is
+The server buffers each upload's decoded **frame payload** plus its
+aggregation coefficient:
 
-    per upload:   (r̂, ξ, coefficient)        — three numbers
+    per upload:   (payload, ξ, coefficient)   — payload_dim + 2 numbers
     per round:    append-only buffers of those triples
 
-and reconstruction (the only d-sized work) happens **lazily** once per
-round close, over whatever arrived.  That is what makes a 10⁵-client
-round simulable: server memory is O(cohort), not O(cohort·d).
+For the FedScalar protocol the payload is two scalars, so server
+memory is O(cohort) — not O(cohort·d) — and reconstruction (the only
+d-sized work) happens **lazily** once per round close, over whatever
+arrived.  That is what makes a 10⁵-client round simulable.  The dense
+baseline protocols (fedavg / qsgd frames, DESIGN §8) flow through the
+same machinery with payload_dim = Θ(d): the state machine is
+identical, the memory asymmetry *is* the paper's point.
 
 Round lifecycle (DESIGN.md §5):
 
@@ -55,8 +59,8 @@ class Upload:
 
     client_id: int
     encoded_round: int      # round whose params the client started from
-    seed: int               # ξ (uint32)
-    r: np.ndarray           # (m,) float32 decoded scalars
+    seed: int               # ξ (uint32; 0 for seedless dense frames)
+    r: np.ndarray           # (payload_dim,) float32 decoded frame payload
     agg_weight: float       # Horvitz–Thompson w = 1/(N·π)
     latency_s: float        # dispatch → arrival
     lost: bool = False      # dropped by the channel
@@ -127,7 +131,7 @@ class StreamingAggregator:
         return "applied"
 
     def close_round(self, k: int):
-        """Freeze round ``k`` → (seeds (A,) u32, coeffs (A,), rs (A, m), stats).
+        """Freeze round k → (seeds (A,) u32, coeffs (A,), rs (A, payload_dim), stats).
 
         A is the number of uploads applying at k — this round's on-time
         arrivals plus stale arrivals deferred from earlier rounds.

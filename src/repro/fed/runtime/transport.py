@@ -1,24 +1,32 @@
-"""The wire: (r, ξ) uplink codec, lossy channel, downlink broadcast.
+"""The wire: uplink frame codecs, lossy channel, downlink broadcast.
 
 Everything the paper abstracts as "upload two scalars" is made concrete
-here (DESIGN.md §1/§5; the k-scalar generalization is §6).  An uplink
-packet is the **k-scalar frame**
+here (DESIGN.md §1/§5; the k-scalar generalization is §6, the protocol
+frame taxonomy §8).  Three frame types ride the uplink, one per
+registered protocol (:mod:`repro.fed.protocols`):
 
-    [ r₀ … r_{k−1} | ξ ]      k scalars at ``scalar`` width + u32 seed
+    scalar    [ r₀ … r_{k−1} | ξ ]       k scalars + u32 seed (fedscalar)
+    dense     [ δ₀ … δ_{d−1} ]           d values at scalar width (fedavg)
+    quantized [ ℓ₀ … ℓ_{d−1} | norms ]   d signed int8 level codes +
+                                         one f32 norm per leaf (qsgd)
 
-in little-endian byte order — 8 bytes per client per round for the
-paper's protocol (k = 1, fp32 r), 4k + 4 in general.  Halving the
-scalar to fp16/bf16 brings the paper frame to 6 bytes; the server
-aggregates whatever the *decoded* value is, so wire quantization error
-flows through the estimator exactly as it would in deployment.  The
-direction family never rides the wire: the server resolves it from
-round configuration, and regenerating v from ξ is family-agnostic by
-construction (DESIGN §1).
+all little-endian — 8 bytes per client per round for the paper's
+protocol (k = 1, fp32 r), Θ(d) bytes for the baselines.  Every codec's
+``bits_per_upload`` delegates to the matching
+:mod:`repro.fed.costmodel` formula (``upload_bits`` /
+``dense_upload_bits`` / ``quantized_upload_bits``), so eq. (12)/(13)
+accounting and the bytes actually serialized share one source.  The
+server aggregates whatever the *decoded* value is, so wire
+quantization error flows through the estimator exactly as it would in
+deployment.  The direction family never rides the wire: the server
+resolves it from round configuration, and regenerating v from ξ is
+family-agnostic by construction (DESIGN §1).
 
-Shapes/dtypes: encode takes float32 ``(k,)`` + int seed; a cohort
-transmit takes float32 ``(C, k)`` and uint32 ``(C,)`` and returns the
-decoded float32 ``(C, k)`` — wire-width-rounded — plus per-upload
-latency/loss.
+Shapes/dtypes: every codec maps a float32 payload vector of length
+``payload_dim`` (+ a u32 seed, scalar frames only) to
+``bytes_per_upload`` bytes and back; a cohort transmit takes float32
+``(C, payload_dim)`` and uint32 ``(C,)`` and returns the decoded
+float32 ``(C, payload_dim)`` plus per-upload latency/loss.
 
 The channel model rides on :class:`repro.fed.costmodel.CostModel`: one
 independent lognormal rate draw per upload gives per-upload latencies
@@ -31,11 +39,18 @@ import dataclasses
 
 import numpy as np
 
-from repro.fed.costmodel import CostModel, upload_bits
+from repro.fed.costmodel import (
+    CostModel,
+    dense_upload_bits,
+    quantized_upload_bits,
+    upload_bits,
+)
 
 __all__ = [
     "SCALAR_WIDTHS",
     "WireFormat",
+    "DenseFrameCodec",
+    "QuantizedFrameCodec",
     "encode_upload",
     "decode_upload",
     "UplinkChannel",
@@ -85,12 +100,142 @@ class WireFormat:
         return SCALAR_WIDTHS[self.scalar][0]()
 
     @property
+    def payload_dim(self) -> int:
+        """Length of the float32 payload vector this codec carries."""
+        return self.num_projections
+
+    @property
     def bits_per_upload(self) -> int:
         return upload_bits(self.num_projections, SCALAR_WIDTHS[self.scalar][1])
 
     @property
     def bytes_per_upload(self) -> int:
         return self.bits_per_upload // 8
+
+    def encode(self, payload: np.ndarray, seed: int) -> bytes:
+        return encode_upload(payload, seed, self)
+
+    def decode(self, buf: bytes) -> tuple[np.ndarray, int]:
+        return decode_upload(buf, self)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseFrameCodec:
+    """FedAvg's uplink packet: the full d-dimensional update, no seed.
+
+    ``[ δ₀ … δ_{d−1} ]`` at ``scalar`` width, little-endian.  fp32 is
+    the paper's baseline (byte-exact round trip); fp16/bf16 are the
+    honest half-width variants — the server aggregates the decoded
+    values, so wire rounding flows into the trajectory.
+    """
+
+    d: int                        # model dimension (payload length)
+    scalar: str = "fp32"          # wire width of each value
+
+    def __post_init__(self):
+        if self.scalar not in SCALAR_WIDTHS:
+            raise ValueError(
+                f"unknown scalar format {self.scalar!r}; want {list(SCALAR_WIDTHS)}")
+        if self.d <= 0:
+            raise ValueError(f"dense frame needs d > 0, got {self.d}")
+
+    @property
+    def payload_dim(self) -> int:
+        return self.d
+
+    @property
+    def bits_per_upload(self) -> int:
+        """Θ(d) — delegates to the costmodel's dense-frame single source."""
+        return dense_upload_bits(self.d, SCALAR_WIDTHS[self.scalar][1])
+
+    @property
+    def bytes_per_upload(self) -> int:
+        return self.bits_per_upload // 8
+
+    def encode(self, payload: np.ndarray, seed: int = 0) -> bytes:
+        """Serialize one dense update; the seed never rides this frame."""
+        del seed
+        payload = np.asarray(payload, np.float32).reshape(-1)
+        if payload.shape != (self.d,):
+            raise ValueError(f"expected {self.d} values, got {payload.shape}")
+        return payload.astype(self.scalar_dtype).tobytes()
+
+    def decode(self, buf: bytes) -> tuple[np.ndarray, int]:
+        if len(buf) != self.bytes_per_upload:
+            raise ValueError(f"packet is {len(buf)} B, expected {self.bytes_per_upload}")
+        vals = np.frombuffer(buf, dtype=self.scalar_dtype, count=self.d)
+        return vals.astype(np.float32), 0
+
+    @property
+    def scalar_dtype(self) -> np.dtype:
+        return SCALAR_WIDTHS[self.scalar][0]()
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedFrameCodec:
+    """QSGD's uplink packet: d signed level codes + one norm per leaf.
+
+    ``[ ℓ₀ … ℓ_{d−1} | n₀ … n_{L−1} ]`` with ℓ an int8 signed level in
+    [−(2^{bits−1}−1), 2^{bits−1}−1] and n float32 L2 norms.  The engine-
+    side payload is the float32 vector ``[levels | norms]`` (levels are
+    exact small integers in float32), so decode∘encode is byte- and
+    value-exact and the server's dequantize reproduces the client's
+    round-trip bit-for-bit (repro.core.qsgd).
+
+    ``bits_per_upload`` delegates to
+    :func:`repro.fed.costmodel.quantized_upload_bits` (``d·bits +
+    L·32``, the paper's formula with per-leaf norms); the reference
+    serializer stores levels byte-aligned (int8), so for ``bits < 8``
+    the accounted bits are the ideal bit-packed size while the bytes on
+    this simulated wire are ``d + 4L``.  At the paper's 8-bit
+    comparison point the two coincide exactly.
+    """
+
+    d: int                        # total quantized elements
+    num_norms: int = 1            # L: one norm per quantized tensor
+    bits: int = 8                 # level-code width (≤ 8: int8 storage)
+    norm_bits: int = 32
+
+    def __post_init__(self):
+        if not 2 <= self.bits <= 8:
+            raise ValueError(f"level codes must be 2..8 bits, got {self.bits}")
+        if self.d <= 0 or self.num_norms <= 0:
+            raise ValueError(f"need d > 0 and num_norms > 0: {self.d}, {self.num_norms}")
+
+    @property
+    def payload_dim(self) -> int:
+        return self.d + self.num_norms
+
+    @property
+    def bits_per_upload(self) -> int:
+        """d·bits + L·norm_bits — the costmodel single source (Table I)."""
+        return quantized_upload_bits(self.d, self.bits, self.num_norms,
+                                     self.norm_bits)
+
+    @property
+    def bytes_per_upload(self) -> int:
+        return self.d + 4 * self.num_norms     # int8 levels + f32 norms
+
+    def encode(self, payload: np.ndarray, seed: int = 0) -> bytes:
+        """Serialize ``[levels | norms]`` float32 payload → bytes."""
+        del seed
+        payload = np.asarray(payload, np.float32).reshape(-1)
+        if payload.shape != (self.payload_dim,):
+            raise ValueError(
+                f"expected {self.payload_dim} payload values, got {payload.shape}")
+        levels = payload[:self.d]
+        lim = (1 << (self.bits - 1)) - 1
+        if np.any(np.abs(levels) > lim) or np.any(levels != np.round(levels)):
+            raise ValueError(f"level codes must be integers in ±{lim}")
+        return levels.astype(np.int8).tobytes() + payload[self.d:].astype("<f4").tobytes()
+
+    def decode(self, buf: bytes) -> tuple[np.ndarray, int]:
+        if len(buf) != self.bytes_per_upload:
+            raise ValueError(f"packet is {len(buf)} B, expected {self.bytes_per_upload}")
+        levels = np.frombuffer(buf, dtype=np.int8, count=self.d).astype(np.float32)
+        norms = np.frombuffer(buf, dtype="<f4", count=self.num_norms,
+                              offset=self.d)
+        return np.concatenate([levels, norms.astype(np.float32)]), 0
 
 
 def encode_upload(r: np.ndarray, seed: int, fmt: WireFormat) -> bytes:
@@ -118,34 +263,41 @@ def decode_upload(buf: bytes, fmt: WireFormat) -> tuple[np.ndarray, int]:
 class TransmitResult:
     """Per-upload outcome of one round's cohort uplink."""
 
-    r_hat: np.ndarray          # (C, m) float32 — decoded (wire-quantized) scalars
-    seeds: np.ndarray          # (C,) uint32 — decoded seeds
+    r_hat: np.ndarray          # (C, payload_dim) float32 — decoded payloads
+    seeds: np.ndarray          # (C,) uint32 — decoded seeds (0 for seedless frames)
     latency_s: np.ndarray      # (C,) arrival latency after dispatch
     lost: np.ndarray           # (C,) bool — dropped in the air
     payload_bytes: int         # total uplink payload offered (incl. lost)
 
 
 class UplinkChannel:
-    """Serialize and channel-simulate one cohort's uplink per round."""
+    """Serialize and channel-simulate one cohort's uplink per round.
 
-    def __init__(self, cost_model: CostModel, fmt: WireFormat):
+    ``fmt`` is any frame codec (:class:`WireFormat`,
+    :class:`DenseFrameCodec`, :class:`QuantizedFrameCodec`): anything
+    with ``payload_dim`` / ``bits_per_upload`` / ``bytes_per_upload``
+    and ``encode``/``decode``.
+    """
+
+    def __init__(self, cost_model: CostModel, fmt):
         self.cm = cost_model
         self.fmt = fmt
 
     def transmit(self, rs: np.ndarray, seeds: np.ndarray) -> TransmitResult:
-        """rs (C, m) float32, seeds (C,) uint32 → :class:`TransmitResult`.
+        """rs (C, payload_dim) float32, seeds (C,) u32 → :class:`TransmitResult`.
 
-        Every upload really goes through bytes: the scalars the server
+        Every upload really goes through bytes: the payloads the server
         aggregates are the *decoded* ones, so fp16/bf16 wire widths are
-        honestly lossy while fp32 is byte-exact.
+        honestly lossy while fp32 (and integer level codes) are
+        byte-exact.
         """
         rs = np.asarray(rs, np.float32).reshape(len(seeds), -1)
         c = len(seeds)
         r_hat = np.empty_like(rs)
         seeds_hat = np.empty(c, np.uint32)
         for i in range(c):
-            packet = encode_upload(rs[i], int(seeds[i]), self.fmt)
-            r_hat[i], seeds_hat[i] = decode_upload(packet, self.fmt)
+            packet = self.fmt.encode(rs[i], int(seeds[i]))
+            r_hat[i], seeds_hat[i] = self.fmt.decode(packet)
         latency = self.cm.per_client_upload_seconds(self.fmt.bits_per_upload, c)
         lost = self.cm.per_client_drops(c)
         return TransmitResult(

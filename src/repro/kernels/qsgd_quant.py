@@ -17,12 +17,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.qsgd import QSGD_TAG
 from repro.kernels.common import fold_seed, hash_u32, interpret_mode, uniform01
 
 __all__ = ["qsgd_kernel_call"]
 
 DEFAULT_BLOCK = (256, 512)
-_TAG_Q = 0x7FEB352D
+# Stream tag of the rounding uniforms — single source: repro.core.qsgd,
+# so kernel, jnp oracle and the core round-trip hash identically.
+_TAG_Q = QSGD_TAG
 
 
 def _qsgd_kernel(seed_ref, norm_ref, x_ref, o_ref, *, levels: int,

@@ -2,21 +2,21 @@
 
 The projection/reconstruction oracles are simply the core-library
 functions (the kernels share their hash and addressing, so equality is
-exact up to float reduction order).  The QSGD oracle reimplements the
-kernel's hash-uniform stochastic rounding in plain jnp.
+exact up to float reduction order).  The QSGD oracle is likewise the
+core quantizer itself — :mod:`repro.core.qsgd` implements the same
+hash-uniform stochastic rounding the kernel fuses, so there is one
+source of the rounding stream and the oracle stays a pure re-export.
 """
 from __future__ import annotations
 
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.fedscalar import FedScalarConfig, server_aggregate
 from repro.core.prng import Distribution
 from repro.core.projection import ProjectionMode, project_tree
-from repro.kernels.common import fold_seed, hash_u32, uniform01
-from repro.kernels.qsgd_quant import _TAG_Q
+from repro.core.qsgd import quantize_tree
 
 __all__ = ["project_tree_ref", "server_update_ref", "qsgd_roundtrip_ref"]
 
@@ -43,31 +43,6 @@ def server_update_ref(params: Any, rs, seeds, server_lr: float = 1.0,
                             block_weights=block_weights)
 
 
-def _coords_2d(shape):
-    if len(shape) == 0:
-        shape2 = (1, 1)
-    elif len(shape) == 1:
-        shape2 = (1,) + tuple(shape)
-    else:
-        shape2 = (int(jnp.prod(jnp.array(shape[:-1]))), shape[-1])
-    row = jax.lax.broadcasted_iota(jnp.uint32, shape2, 0)
-    col = jax.lax.broadcasted_iota(jnp.uint32, shape2, 1)
-    return shape2, row, col
-
-
 def qsgd_roundtrip_ref(tree: Any, seed, bits: int = 8):
-    levels = (1 << (bits - 1)) - 1
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    out = []
-    for tag, leaf in enumerate(leaves):
-        shape2, row, col = _coords_2d(leaf.shape)
-        x = leaf.astype(jnp.float32).reshape(shape2)
-        norm = jnp.linalg.norm(x.reshape(-1))
-        norm = jnp.where(norm == 0, 1.0, norm)
-        u = uniform01(hash_u32(fold_seed(seed, tag), row, col, _TAG_Q))
-        scaled = jnp.abs(x) / norm * levels
-        floor = jnp.floor(scaled)
-        level = floor + (u < (scaled - floor)).astype(jnp.float32)
-        q = norm * jnp.sign(x) * level / levels
-        out.append(q.astype(leaf.dtype).reshape(leaf.shape))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    """Oracle ≡ :func:`repro.core.qsgd.quantize_tree` (same hash chain)."""
+    return quantize_tree(tree, seed, bits)

@@ -1,0 +1,313 @@
+"""Protocol-engine parity: the refactor's bit-identity contracts.
+
+The engine's protocol abstraction (DESIGN §8) must not change a single
+bit of any trajectory:
+
+* ``run_federation(protocol_name="fedavg"|"qsgd")`` through the
+  **event-driven** path ≡ the standalone ``core`` round functions on
+  the same cohorts and seeds (mirroring the fused-vs-``run_simulation``
+  identity test of ``tests/test_runtime.py``),
+* the same holds on the fused full-participation path,
+* ``fedscalar`` via the protocol interface ≡ a manual composition of
+  the ``client_stage`` / ``server_aggregate`` building blocks the
+  pre-abstraction engine called directly, on the single-device path
+  and on (1, 1) / 8-shard meshes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedavg as fa
+from repro.core import fedscalar as fs
+from repro.core import qsgd as q
+from repro.fed.runtime import (
+    ClientPopulation,
+    CohortSampler,
+    RuntimeConfig,
+    draw_cohort_batches,
+    run_federation,
+)
+from repro.models.mlp_classifier import init_mlp, mlp_grad
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.fixture(scope="module")
+def digits8():
+    from repro.data import load_digits, make_client_datasets, train_test_split_arrays
+    x, y = load_digits(n_samples=400)
+    xtr, ytr, xte, yte = train_test_split_arrays(x, y)
+    return make_client_datasets(xtr, ytr, 8), xte, yte
+
+
+@pytest.fixture(scope="module")
+def stacked(digits8):
+    from repro.fed.simulation import _stack_clients
+    clients, _, _ = digits8
+    return _stack_clients(clients)
+
+
+# ---------------------------------------------------------------------------
+# event-driven engine ≡ core round functions (sampled cohorts)
+# ---------------------------------------------------------------------------
+
+ROUNDS, POP, PART = 4, 48, 0.25          # uniform cohorts of C = 12
+
+
+def _reference_rounds(proto_name, p0, stacked_xy, seed=0):
+    """Replay the engine's cohorts/batches through the core rounds."""
+    cx, cy = stacked_xy
+    sampler = CohortSampler(ClientPopulation(POP), PART, "uniform", seed=seed)
+    if proto_name == "fedavg":
+        pc = fa.FedAvgConfig()
+        rnd = jax.jit(
+            lambda p, b, k, i: fa.fedavg_round(p, b, k, mlp_grad, pc)[0])
+    else:
+        pc = q.QSGDConfig()
+        rnd = jax.jit(
+            lambda p, b, k, i: q.qsgd_round(p, b, k, mlp_grad, pc,
+                                            client_ids=i)[0])
+    params = p0
+    cohorts = []
+    for k in range(ROUNDS):
+        ids = jnp.asarray(sampler.sample(k).client_ids, jnp.uint32)
+        cohorts.append(np.asarray(ids))
+        bx, by = draw_cohort_batches(cx, cy, 8, seed, jnp.uint32(k), ids, 5, 32)
+        params = rnd(params, (bx, by), jnp.uint32(k), ids)
+    return params, cohorts
+
+
+@pytest.mark.parametrize("proto", ["fedavg", "qsgd"])
+def test_event_driven_engine_bitidentical_to_core_round(proto, digits8, stacked):
+    """Engine rounds ≡ core rounds on the same sampled cohorts, bit-for-bit.
+
+    Uniform sampler, full arrival → the engine's exact-mean apply is
+    the paper aggregation; the reference consumes the engine's own
+    batch draw (``draw_cohort_batches``) and, for qsgd, the same
+    (round, client-id)-keyed rounding streams.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    h = run_federation(
+        RuntimeConfig(rounds=ROUNDS, population=POP, participation=PART,
+                      protocol_name=proto, eval_every=10**6),
+        p0, clients, xte, yte)
+    assert not h["fused_path"] and h["protocol"] == proto
+    ref_params, cohorts = _reference_rounds(proto, p0, stacked)
+    assert all(len(c) == 12 for c in cohorts)
+    _assert_tree_equal(h["final_params"], ref_params)
+
+
+@pytest.mark.parametrize("proto", ["fedavg", "qsgd"])
+def test_fused_engine_bitidentical_to_core_round(proto, digits8):
+    """Full participation → fused scan ≡ per-round jitted core rounds.
+
+    ``run_simulation``'s scan drives the same core round functions, so
+    the engine's fused delegation inherits bit-identity; this pins the
+    whole chain engine → simulation → core on the (8-client) paper
+    shape, including the batch-draw and qsgd seed conventions.
+    """
+    from repro.fed import SimulationConfig, run_simulation
+
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    h = run_federation(
+        RuntimeConfig(rounds=6, population=8, participation=1.0,
+                      protocol_name=proto),
+        p0, clients, xte, yte)
+    assert h["fused_path"]
+    sim = run_simulation(
+        SimulationConfig(method=proto, rounds=6, num_clients=8),
+        p0, clients, xte, yte)
+    np.testing.assert_array_equal(h["loss"], sim["loss"])
+    _assert_tree_equal(h["final_params"], sim["final_params"])
+    # Θ(d) accounting flows from the protocol codec
+    d = sum(l.size for l in _leaves(p0))
+    expected = d * 32 if proto == "fedavg" else d * 8 + 32 * len(_leaves(p0))
+    assert h["bits_per_client_per_round"] == expected
+
+
+def test_qsgd_wire_roundtrip_is_core_roundtrip(stacked):
+    """Levels+norm frames decode to exactly the client round-trip value.
+
+    encode→(int8 levels | f32 norms) bytes→decode→dequantize must equal
+    ``quantize_tree``'s quantize→dequantize (which itself equals the
+    Pallas kernel / jnp oracle, tests/test_kernels.py) bit-for-bit.
+    """
+    from repro.fed.protocols import make_protocol
+
+    p0 = init_mlp(seed=3)
+    delta = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(
+            np.random.RandomState(p.size).randn(*p.shape), jnp.float32) * 0.01,
+        p0)
+    proto = make_protocol("qsgd", p0)
+    payload = proto.client_payload(delta, jnp.uint32(0xBEEF))
+    # through the reference serializer (bytes on the wire)
+    buf = proto.wire_codec.encode(np.asarray(payload), 0)
+    decoded, _ = proto.wire_codec.decode(buf)
+    np.testing.assert_array_equal(decoded, np.asarray(payload))
+    # dequantize via server_apply on the single frame: the model must
+    # move by exactly the core round-trip value
+    new = proto.server_apply(p0, jnp.asarray(decoded)[None, :], None, None)
+    q_rt = q.quantize_tree(delta, jnp.uint32(0xBEEF), 8)
+    expected = jax.tree_util.tree_map(
+        lambda p, g: (p + 1.0 * g.astype(jnp.float32)).astype(p.dtype),
+        p0, q_rt)
+    _assert_tree_equal(new, expected)
+
+
+# ---------------------------------------------------------------------------
+# fedscalar through the protocol interface: unchanged engine numerics
+# ---------------------------------------------------------------------------
+
+def test_fedscalar_protocol_round_matches_manual_composition(digits8, stacked):
+    """One event-driven round ≡ hand-rolled client_stage/server_aggregate.
+
+    Replays exactly what the pre-abstraction engine did — chunked local
+    SGD, projection encode, bucket-padded weighted fori aggregation —
+    and demands the protocol-routed engine produce the same bits.
+    """
+    clients, xte, yte = digits8
+    cx, cy = stacked
+    p0 = init_mlp()
+    cfg = RuntimeConfig(rounds=1, population=POP, participation=PART,
+                        eval_every=10**6)
+    h = run_federation(cfg, p0, clients, xte, yte)
+
+    sampler = CohortSampler(ClientPopulation(POP), PART, "uniform", seed=0)
+    cohort = sampler.sample(0)
+    ids = jnp.asarray(cohort.client_ids, jnp.uint32)
+    pcfg = cfg.protocol()
+    local = fs.make_local_sgd(mlp_grad, cfg.local_lr, cfg.local_steps)
+
+    @jax.jit
+    def chunk(params, k, cids):
+        bx, by = draw_cohort_batches(cx, cy, 8, cfg.seed, k, cids, 5, 32)
+        seeds = fs.round_seeds_for(k, cids)
+        deltas = jax.vmap(local, in_axes=(None, 0))(params, (bx, by))
+        rs, _ = jax.vmap(lambda dl, sd: fs.client_stage(dl, sd, pcfg))(
+            deltas, seeds)
+        return rs, seeds
+
+    rs, seeds = chunk(p0, jnp.uint32(0), ids)
+    a = len(cohort.client_ids)
+    bucket = 16
+    rs_b = np.zeros((bucket, 1), np.float32)
+    rs_b[:a] = np.asarray(rs)
+    seeds_b = np.zeros(bucket, np.uint32)
+    seeds_b[:a] = np.asarray(seeds)
+    w_b = np.zeros(bucket, np.float32)
+    w_b[:a] = cohort.agg_weights.astype(np.float32)
+
+    @jax.jit
+    def apply(params, r, s, w):
+        return fs.server_aggregate(params, r, s, pcfg, weights=w)
+
+    ref = apply(p0, jnp.asarray(rs_b), jnp.asarray(seeds_b), jnp.asarray(w_b))
+    _assert_tree_equal(h["final_params"], ref)
+
+
+def test_fedscalar_protocol_mesh11_bitidentical_to_unsharded(digits8):
+    """Protocol-routed engine on a (1,1) mesh ≡ the unsharded engine, bitwise.
+
+    The bit-identity anchor layout (DESIGN §7): one device means the
+    sharded decode touches the same elements in the same order, so the
+    protocol plumbing must leave the whole 3-round trajectory unchanged.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    base = dict(rounds=3, population=16, participation=0.5, seed=1,
+                eval_every=10**6)
+    h11 = run_federation(RuntimeConfig(**base, mesh_shape=(1, 1)),
+                         p0, clients, xte, yte)
+    hno = run_federation(RuntimeConfig(**base), p0, clients, xte, yte)
+    assert h11["sharding"]["devices"] == 1 and hno["sharding"] is None
+    _assert_tree_equal(h11["final_params"], hno["final_params"])
+
+
+def test_fedscalar_protocol_mesh8_apply_bitidentical(fed_mesh):
+    """Protocol server_apply on the 8-shard mesh ≡ server_aggregate_mesh.
+
+    The protocol route must be the *same call* the pre-abstraction
+    engine made — bitwise, on the decode the mesh tests already pin as
+    shard-count-invariant.  (The full engine trajectory on a multi-
+    device mesh drifts by ulps because the *client* compute runs SPMD
+    once params come back sharded — pre-existing behavior covered by
+    ``test_fed_sharding.test_engine_mesh_run_matches_single_device``.)
+    """
+    from repro.fed.protocols import make_protocol
+
+    p0 = init_mlp(seed=2)
+    cfg = RuntimeConfig()
+    proto = make_protocol("fedscalar", p0, fedscalar_config=cfg.protocol(),
+                          wire_format=cfg.wire())
+    n = 8
+    seeds = fs.round_seeds(0, n)
+    rs = jnp.asarray(np.random.RandomState(1).randn(n, 1), jnp.float32)
+    w = jnp.asarray(np.random.RandomState(2).rand(n).astype(np.float32) / n)
+    got = proto.server_apply(p0, rs, seeds, w, mesh=fed_mesh)
+    want = fs.server_aggregate_mesh(p0, rs, seeds, cfg.protocol(), fed_mesh,
+                                    weights=w)
+    _assert_tree_equal(got, want)
+
+
+def test_dense_protocols_refuse_mesh(digits8):
+    """Dense frames need a d-sized gather on a sharded server (DESIGN §8)."""
+    clients, xte, yte = digits8
+    with pytest.raises(ValueError, match="gather"):
+        run_federation(
+            RuntimeConfig(rounds=1, population=8, participation=0.5,
+                          protocol_name="fedavg", mesh_shape=(2, 4)),
+            init_mlp(), clients, xte, yte)
+
+
+def test_unknown_protocol_rejected(digits8):
+    clients, xte, yte = digits8
+    with pytest.raises(ValueError, match="unknown protocol"):
+        run_federation(
+            RuntimeConfig(rounds=1, population=8, protocol_name="signsgd"),
+            init_mlp(), clients, xte, yte)
+
+
+# ---------------------------------------------------------------------------
+# weighted (IPW) dense apply: unbiased generalization stays consistent
+# ---------------------------------------------------------------------------
+
+def test_dense_weighted_apply_reduces_to_mean():
+    """weights = 1/A ≈ the uniform mean (same estimator, fp tolerance)."""
+    from repro.fed.protocols import make_protocol
+
+    p0 = init_mlp(seed=7)
+    proto = make_protocol("fedavg", p0)
+    rng = np.random.RandomState(0)
+    frames = jnp.asarray(rng.randn(6, proto.payload_dim).astype(np.float32))
+    mean = proto.server_apply(p0, frames, None, None)
+    wsum = proto.server_apply(p0, frames, None, jnp.full((6,), 1.0 / 6))
+    for a, b in zip(_leaves(mean), _leaves(wsum)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_engine_drops_route_dense_protocols_to_weighted_path(digits8):
+    """Channel loss → a < C → the IPW-weighted apply; accounting intact."""
+    from repro.fed.costmodel import ChannelConfig
+
+    clients, xte, yte = digits8
+    h = run_federation(
+        RuntimeConfig(rounds=5, population=POP, participation=PART,
+                      protocol_name="qsgd", eval_every=4,
+                      channel=ChannelConfig(drop_prob=0.3)),
+        init_mlp(), clients, xte, yte)
+    assert h["lost_channel"].sum() > 0
+    offered = h["cohort_size"].sum()
+    assert offered == h["applied"].sum() + h["lost_channel"].sum()
+    evals = ~np.isnan(h["loss"])
+    assert np.isfinite(h["loss"][evals]).all()

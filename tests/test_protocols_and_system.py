@@ -86,6 +86,41 @@ def test_upload_bits_accounting():
     assert d * 8 < qb < d * 8 + 32 * 64   # 8 bits/coord + per-leaf norms
 
 
+def test_upload_bits_single_source_is_protocol_wire_codec():
+    """core upload_bits ≡ each protocol's wire codec ≡ costmodel formulas.
+
+    The Table I payload formulas (64, d·32, d·bits + norms) must come
+    from one place per protocol (ISSUE 4 satellite): the codec, which
+    itself delegates to ``repro.fed.costmodel``.
+    """
+    from repro.fed.costmodel import dense_upload_bits, quantized_upload_bits, upload_bits
+    from repro.fed.protocols import make_protocol
+
+    params = init_mlp()
+    d = tree_size(params)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    for name, core_bits in [
+        ("fedscalar", fs.upload_bits_per_client(params, fs.FedScalarConfig())),
+        ("fedavg", fa.upload_bits_per_client(params, fa.FedAvgConfig())),
+        ("qsgd", q.upload_bits_per_client(params, q.QSGDConfig())),
+    ]:
+        proto = make_protocol(name, params)
+        assert proto.upload_bits == core_bits, name
+    assert make_protocol("fedscalar", params).upload_bits == upload_bits(1, 32)
+    assert make_protocol("fedavg", params).upload_bits == dense_upload_bits(d)
+    assert make_protocol("qsgd", params).upload_bits == \
+        quantized_upload_bits(d, 8, n_leaves)
+    # half-width scalars: core accounting ≡ the fp16 wire frame (seed
+    # always rides as u32), for the paper k=1 and a multi-scalar k
+    from repro.fed.runtime import WireFormat
+    assert fs.upload_bits_per_client(
+        params, fs.FedScalarConfig(scalar_bits=16)) == \
+        WireFormat(scalar="fp16").bits_per_upload == 48
+    assert fs.upload_bits_per_client(
+        params, fs.FedScalarConfig(num_projections=4, scalar_bits=16)) == \
+        WireFormat(scalar="fp16", num_projections=4).bits_per_upload
+
+
 def test_round_seeds_unique_across_rounds_and_clients():
     s0 = fs.round_seeds(0, 64)
     s1 = fs.round_seeds(1, 64)
@@ -112,6 +147,40 @@ def test_table1_matches_paper():
     # 100 kbps → 160 s concurrent OK, 3,200 s TDMA†
     assert rows[100000]["concurrent_total_s"] == pytest.approx(160.0)
     assert rows[100000]["tdma_violates"]
+
+
+def test_table1_upload_time_ratios_match_paper():
+    """CostModel upload times per protocol match the paper's ratios to 1%.
+
+    Table I is stated for FedAvg's d·32-bit payload at d = 1000; the
+    protocol codecs give 64 bits (FedScalar) and d·8 + 32 (QSGD, flat
+    vector).  With the deterministic channel (σ = 0) the per-round
+    upload-time ratios must equal the payload ratios — FedAvg/FedScalar
+    = 32000/64 = 500 and FedAvg/QSGD = 32000/8032 — to 1%, at every
+    Table I bandwidth and under both access schemes.
+    """
+    from repro.fed.costmodel import dense_upload_bits, quantized_upload_bits, upload_bits
+
+    d = 1000
+    payloads = dict(
+        fedscalar=upload_bits(1, 32),               # 64
+        fedavg=dense_upload_bits(d, 32),            # 32,000
+        qsgd=quantized_upload_bits(d, 8, 1),        # 8,032
+    )
+    assert payloads["fedavg"] / payloads["fedscalar"] == 500.0
+    for bw in (1e3, 10e3, 50e3, 100e3):
+        for access in ("concurrent", "tdma"):
+            ch = ChannelConfig(bandwidth_bps=bw, lognormal_sigma=0.0,
+                               t_other_frac=0.0, access=access)
+            cm = CostModel(ch, fedavg_bits_per_client=payloads["fedavg"])
+            t = {k: cm.round_cost(v)[1] for k, v in payloads.items()}
+            assert t["fedavg"] / t["fedscalar"] == pytest.approx(500.0, rel=0.01)
+            assert t["fedavg"] / t["qsgd"] == pytest.approx(
+                32000.0 / 8032.0, rel=0.01)
+            # absolute anchor: Table I's 1 kbps row is 32 s/round (FedAvg)
+            if bw == 1e3 and access == "concurrent":
+                assert t["fedavg"] == pytest.approx(32.0, rel=0.01)
+                assert t["fedscalar"] == pytest.approx(0.064, rel=0.01)
 
 
 def test_cost_model_energy_eq13():

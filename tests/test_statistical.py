@@ -1,0 +1,209 @@
+"""Statistical/property tier: quantizer laws and wire-codec round trips.
+
+Complements the bit-identity parity tests with *distributional*
+contracts (PR 3 tiering: large-sample checks ride the ``slow`` tier):
+
+* QSGD's hash-seeded stochastic quantizer is unbiased, E[Q(x)] = x,
+  and obeys the Alistarh et al. (2017) second-moment bound
+  E‖Q(x) − x‖² ≤ min(d/s², √d/s)·‖x‖² per quantized tensor,
+* every frame codec (scalar / dense / quantized) is an exact
+  byte-level round trip across scalar widths and awkward payload
+  dimensions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qsgd as q
+from repro.fed.costmodel import (
+    dense_upload_bits,
+    quantized_upload_bits,
+    upload_bits,
+)
+from repro.fed.runtime import DenseFrameCodec, QuantizedFrameCodec, WireFormat
+
+
+# ---------------------------------------------------------------------------
+# QSGD quantizer: unbiasedness E[Q(x)] = x
+# ---------------------------------------------------------------------------
+
+def _mc_mean_and_mse(x, levels: int, n_seeds: int):
+    """Monte Carlo E[Q(x)] and E‖Q(x) − x‖² over the hash-seed ensemble."""
+    f = jax.jit(jax.vmap(lambda s: q.quantize_leaf(x, s, levels)))
+    qs = f(jnp.arange(n_seeds, dtype=jnp.uint32))
+    mean = jnp.mean(qs, axis=0)
+    mse = jnp.mean(jnp.sum((qs - x[None, :]) ** 2, axis=1))
+    return np.asarray(mean), float(mse)
+
+
+_DIST_SEEDS = {"gaussian": 11, "uniform": 22, "heavy": 33}
+
+
+@pytest.mark.parametrize("dist", sorted(_DIST_SEEDS))
+def test_qsgd_quantizer_unbiased(dist):
+    """E[Q(x)] = x for light- and heavy-tailed leaves (300 seeds)."""
+    rng = np.random.RandomState(_DIST_SEEDS[dist])
+    d = 512
+    if dist == "gaussian":
+        xv = rng.randn(d)
+    elif dist == "uniform":
+        xv = rng.uniform(-3, 3, d)
+    else:                              # a few dominant coordinates
+        xv = rng.standard_t(1.5, d)
+    x = jnp.asarray(xv, jnp.float32)
+    mean, _ = _mc_mean_and_mse(x, levels=127, n_seeds=300)
+    # per-coordinate MC std ≤ ‖x‖/(s·√n); compare against the ∞-norm
+    tol = 5.0 * float(jnp.linalg.norm(x)) / (127 * np.sqrt(300))
+    assert np.max(np.abs(mean - xv)) < tol, (dist, np.max(np.abs(mean - xv)), tol)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("d", [33, 512])
+def test_qsgd_variance_bound(bits, d):
+    """E‖Q(x) − x‖² ≤ min(d/s², √d/s)·‖x‖²  (QSGD Lemma 3.1)."""
+    s = (1 << (bits - 1)) - 1
+    x = jnp.asarray(np.random.RandomState(d + bits).randn(d), jnp.float32)
+    _, mse = _mc_mean_and_mse(x, levels=s, n_seeds=400)
+    bound = min(d / s**2, np.sqrt(d) / s) * float(jnp.sum(x * x))
+    # 400-seed MC noise on the MSE is ≪ the bound's slack; 5% headroom
+    assert mse <= 1.05 * bound, (mse, bound)
+
+
+@pytest.mark.slow
+def test_qsgd_unbiased_over_awkward_shapes_large_sample():
+    """2000-seed unbiasedness sweep over awkward leaf shapes/sizes."""
+    rng = np.random.RandomState(0)
+    for shape in [(1,), (7,), (3, 5), (2, 3, 4), (127,)]:
+        x = jnp.asarray(rng.randn(*shape), jnp.float32)
+        f = jax.jit(jax.vmap(lambda s: q.quantize_leaf(x, s, 127)))
+        qs = np.asarray(f(jnp.arange(2000, dtype=jnp.uint32)))
+        err = np.abs(qs.mean(axis=0) - np.asarray(x)).max()
+        tol = 5.0 * float(jnp.linalg.norm(x)) / (127 * np.sqrt(2000))
+        assert err < tol, (shape, err, tol)
+
+
+def test_qsgd_tree_quantizer_matches_kernel_oracle():
+    """quantize_tree ≡ the kernels' jnp oracle (same hash → same bits)."""
+    from repro.kernels import ref
+
+    tree = {"a": jnp.asarray(np.random.RandomState(1).randn(40, 17), jnp.float32),
+            "b": jnp.asarray(np.random.RandomState(2).randn(9), jnp.float32)}
+    a = q.quantize_tree(tree, jnp.uint32(77), 8)
+    b = ref.qsgd_roundtrip_ref(tree, jnp.uint32(77), 8)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# wire codecs: encode→decode round trips, all three frame types
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scalar", ["fp32", "fp16", "bf16"])
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_scalar_frame_roundtrip(scalar, k):
+    fmt = WireFormat(scalar=scalar, num_projections=k)
+    assert fmt.bits_per_upload == upload_bits(
+        k, 32 if scalar == "fp32" else 16)
+    rng = np.random.RandomState(k)
+    for _ in range(20):
+        r = (rng.randn(k) * 10 ** rng.randint(-3, 4)).astype(np.float32)
+        seed = int(rng.randint(0, 2**32, dtype=np.uint64))
+        buf = fmt.encode(r, seed)
+        assert len(buf) == fmt.bytes_per_upload
+        r_hat, seed_hat = fmt.decode(buf)
+        assert seed_hat == seed
+        # decode∘encode is idempotent at the byte level
+        assert fmt.encode(r_hat, seed_hat) == buf
+        if scalar == "fp32":
+            np.testing.assert_array_equal(r_hat, r)
+
+
+@pytest.mark.parametrize("d", [1, 3, 37, 257, 1990])
+def test_dense_frame_roundtrip_fp32_exact(d):
+    codec = DenseFrameCodec(d)
+    assert codec.bits_per_upload == dense_upload_bits(d, 32) == 32 * d
+    assert codec.payload_dim == d
+    payload = np.random.RandomState(d).randn(d).astype(np.float32)
+    buf = codec.encode(payload)
+    assert len(buf) == codec.bytes_per_upload == 4 * d
+    decoded, seed = codec.decode(buf)
+    assert seed == 0
+    np.testing.assert_array_equal(decoded, payload)
+
+
+@pytest.mark.parametrize("scalar", ["fp16", "bf16"])
+def test_dense_frame_half_width_is_honest(scalar):
+    """Half-width dense frames round through the narrow dtype exactly."""
+    d = 63
+    codec = DenseFrameCodec(d, scalar=scalar)
+    assert codec.bits_per_upload == dense_upload_bits(d, 16)
+    payload = np.random.RandomState(0).randn(d).astype(np.float32)
+    decoded, _ = codec.decode(codec.encode(payload))
+    np.testing.assert_array_equal(
+        decoded, payload.astype(codec.scalar_dtype).astype(np.float32))
+    # idempotent: a decoded value re-encodes to the same bytes
+    assert codec.encode(decoded) == codec.encode(payload)
+
+
+@pytest.mark.parametrize("d,num_norms", [(5, 1), (37, 3), (1990, 6)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantized_frame_roundtrip_exact(d, num_norms, bits):
+    codec = QuantizedFrameCodec(d, num_norms=num_norms, bits=bits)
+    assert codec.bits_per_upload == quantized_upload_bits(d, bits, num_norms)
+    assert codec.payload_dim == d + num_norms
+    rng = np.random.RandomState(d + bits)
+    lim = (1 << (bits - 1)) - 1
+    levels = rng.randint(-lim, lim + 1, size=d).astype(np.float32)
+    norms = np.abs(rng.randn(num_norms)).astype(np.float32) + 0.1
+    payload = np.concatenate([levels, norms])
+    buf = codec.encode(payload)
+    assert len(buf) == codec.bytes_per_upload == d + 4 * num_norms
+    decoded, seed = codec.decode(buf)
+    assert seed == 0
+    np.testing.assert_array_equal(decoded, payload)
+
+
+def test_quantized_frame_rejects_out_of_range_levels():
+    codec = QuantizedFrameCodec(4, num_norms=1, bits=8)
+    bad = np.asarray([1.0, 2.0, 300.0, 0.0, 1.0], np.float32)
+    with pytest.raises(ValueError, match="level codes"):
+        codec.encode(bad)
+    frac = np.asarray([0.5, 0.0, 0.0, 0.0, 1.0], np.float32)
+    with pytest.raises(ValueError, match="level codes"):
+        codec.encode(frac)
+
+
+def test_codec_bits_accounting_at_paper_point():
+    """At the paper's 8-bit point, accounted bits == serialized bytes·8."""
+    codec = QuantizedFrameCodec(1000, num_norms=1, bits=8)
+    assert codec.bits_per_upload == 1000 * 8 + 32
+    assert codec.bytes_per_upload * 8 == codec.bits_per_upload
+
+
+@pytest.mark.slow
+def test_uplink_channel_transmits_all_frame_types():
+    """A cohort of each frame type survives the byte-level channel path."""
+    from repro.fed.costmodel import ChannelConfig, CostModel
+    from repro.fed.runtime import UplinkChannel
+
+    rng = np.random.RandomState(3)
+    c = 16
+    for codec, make in [
+        (WireFormat(num_projections=2),
+         lambda: rng.randn(c, 2).astype(np.float32)),
+        (DenseFrameCodec(101),
+         lambda: rng.randn(c, 101).astype(np.float32)),
+        (QuantizedFrameCodec(40, num_norms=2, bits=8),
+         lambda: np.concatenate(
+             [rng.randint(-127, 128, size=(c, 40)).astype(np.float32),
+              np.abs(rng.randn(c, 2)).astype(np.float32) + 0.1], axis=1)),
+    ]:
+        cm = CostModel(ChannelConfig(), fedavg_bits_per_client=32_000)
+        ch = UplinkChannel(cm, codec)
+        payloads = make()
+        seeds = rng.randint(0, 2**31, size=c).astype(np.uint32)
+        tx = ch.transmit(payloads, seeds)
+        np.testing.assert_array_equal(tx.r_hat, payloads)
+        assert tx.payload_bytes == c * codec.bytes_per_upload
+        assert np.all(tx.latency_s > 0)
