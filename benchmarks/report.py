@@ -28,6 +28,7 @@ import numpy as np
 REQUIRED_SECTIONS = (
     "## §Paper-validation",
     "## §Baselines",
+    "## §Downlink",
     "## §Runtime",
     "## §Sharding",
     "## §Directions",
@@ -91,19 +92,46 @@ def baselines_table() -> str:
                 "produce `experiments/baselines/tradeoff.csv`)*")
     d = np.atleast_1d(np.genfromtxt(path, delimiter=",", names=True,
                                     dtype=None, encoding="utf-8"))
+    two_sided = "total_downlink_bits" in (d.dtype.names or ())
     rows = [
         f"| {r['protocol']} | {int(r['d']):,} | {r['access']} | "
         f"{int(r['bits_per_client_per_round']):,} | "
         f"{r['final_accuracy']*100:.2f} | {r['total_uplink_bits']:.3g} | "
-        f"{r['total_wall_s']:.3g} | {r['total_energy_j']:.3g} | "
+        + (f"{r['total_downlink_bits']:.3g} | "
+           f"{r['total_traffic_bits']:.3g} | " if two_sided else "— | — | ")
+        + f"{r['total_wall_s']:.3g} | {r['total_energy_j']:.3g} | "
         f"{r['acc_at_1e6_bits']*100:.2f} | "
         f"{r['acc_at_1250_s']*100:.2f} | {r['acc_at_50_j']*100:.2f} |"
         for r in d
     ]
     hdr = ("| protocol | d | access | bits/client/round | final acc % | "
-           "total bits | wall s | energy J | acc@10⁶ bits % | "
-           "acc@1250 s % | acc@50 J % |\n"
-           "|---|---|---|---|---|---|---|---|---|---|---|")
+           "up bits | down bits | total bits | wall s | energy J | "
+           "acc@10⁶ bits % | acc@1250 s % | acc@50 J % |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def downlink_table() -> str:
+    path = "experiments/downlink/tradeoff.csv"
+    if not os.path.exists(path):
+        return ("*(no artifact — run `PYTHONPATH=src python examples/"
+                "downlink_tradeoff.py` or `python -m benchmarks.run` to "
+                "produce `experiments/downlink/tradeoff.csv`)*")
+    d = np.atleast_1d(np.genfromtxt(path, delimiter=",", names=True,
+                                    dtype=None, encoding="utf-8"))
+    rows = [
+        f"| {r['protocol']} | {r['downlink']} | {int(r['d']):,} | "
+        f"{int(r['uplink_bits_per_client_per_round']):,} | "
+        f"{r['downlink_bits_per_round']:,.0f} | "
+        f"{r['round_traffic_bits']:,.0f} | {r['total_traffic_bits']:.3g} | "
+        f"{r['total_wall_s']:.3g} | {r['total_energy_j']:.3g} | "
+        f"{r['final_accuracy']*100:.2f} |"
+        for r in d
+    ]
+    hdr = ("| protocol | downlink | d | up bits/client/round | "
+           "down bits/round | round traffic bits | total bits | wall s | "
+           "energy J | final acc % |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
     return hdr + "\n" + "\n".join(rows)
 
 
@@ -190,6 +218,24 @@ def main():
           "Engine rounds are bit-identical to the `core` round "
           "functions (`tests/test_protocol_parity.py`).\n")
     print(baselines_table())
+
+    print("\n## §Downlink — two-sided round traffic: digest vs dense "
+          "broadcast (DESIGN §9)\n")
+    print("The paper's loop begins \"server broadcasts x_k\" — a Θ(d) "
+          "downlink eqs. (12)/(13) never priced.  Both wire disciplines "
+          "run through the engine's downlink channel: `dense` broadcasts "
+          "the d·32-bit model every round; `digest` (FedScalar only) "
+          "broadcasts the round's (seeds, coefficients, scalars) — "
+          "O(C·k) bits, independent of d — and stateful clients replay "
+          "the identical update from the seeded directions "
+          "(bit-identity asserted in `tests/test_downlink.py`, incl. a "
+          "missed-round catch-up through the bounded round log).  The "
+          "claim this table carries: under digests FedScalar's **total** "
+          "(up + down) round traffic is dimension-free, converting the "
+          "headline from \"the uplink is 64 bits\" to \"the round is "
+          "O(C) scalars\"; every dense-downlink row stays Θ(d).  "
+          "Wall/energy are the two-sided (12′)/(13′) totals.\n")
+    print(downlink_table())
 
     print("\n## §Runtime — server aggregation throughput (clients/s)\n")
     print("Streaming server round close, one 1M-param leaf, weighted "

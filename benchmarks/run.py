@@ -12,6 +12,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         through the engine at 0.1 Mbps, concurrent +
                         TDMA, d swept (derived = bits/round + final acc;
                         CSV → experiments/baselines/tradeoff.csv)
+  downlink_*          — two-sided round traffic: digest vs dense
+                        downlink per protocol × d (DESIGN §9; derived =
+                        round traffic + total wall/energy; CSV →
+                        experiments/downlink/tradeoff.csv)
   prop21_variance     — Rademacher-vs-Gaussian aggregation-variance gap
                         (derived = measured/theory; theory = 2Σ‖δₙ‖²/N²)
   direction_*         — variance-vs-bandwidth sweep of the pluggable
@@ -127,6 +131,28 @@ def bench_baseline_tradeoff(rounds: int):
              f"acc={r['final_accuracy']:.4f}_wall={r['total_wall_s']:.0f}s_"
              f"energy={r['total_energy_j']:.1f}J")
     write_tradeoff_csv(rows)
+
+
+def bench_downlink_tradeoff(rounds: int):
+    """Two-sided round traffic: digest vs dense downlink (DESIGN §9).
+
+    The acceptance shape: fedscalar×digest's round_traffic_bits is the
+    same at every d (dimension-free round), while every dense-downlink
+    row — fedscalar×dense included — scales Θ(d).  Rows land in
+    ``experiments/downlink/tradeoff.csv`` for report §Downlink.
+    """
+    from repro.fed.baselines import downlink_tradeoff, write_downlink_csv
+
+    t0 = time.perf_counter()
+    rows = downlink_tradeoff(rounds=rounds)
+    us = (time.perf_counter() - t0) / max(len(rows), 1) * 1e6
+    for r in rows:
+        emit(f"downlink_{r['protocol']}_{r['downlink']}_d{r['d']}", us,
+             f"{r['round_traffic_bits']:.0f}bits/round_"
+             f"wall={r['total_wall_s']:.0f}s_"
+             f"energy={r['total_energy_j']:.1f}J_"
+             f"acc={r['final_accuracy']:.4f}")
+    write_downlink_csv(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -380,6 +406,7 @@ def main() -> None:
     if not args.skip_digits:
         bench_digits(args.rounds)
         bench_baseline_tradeoff(args.rounds)
+        bench_downlink_tradeoff(args.rounds)
     bench_prop21()
     bench_direction_sweep()
     bench_kernels()

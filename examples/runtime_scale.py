@@ -12,11 +12,17 @@ Usage::
         [--population 100000] [--participation 0.01] [--rounds 50] \
         [--sampler uniform|weighted|poisson] [--scalar fp32|fp16|bf16] \
         [--deadline-s inf] [--max-staleness 0] [--staleness-beta 0.0] \
-        [--drop-prob 0.0] [--check-fused]
+        [--drop-prob 0.0] [--downlink dense|digest] [--log-window 64] \
+        [--check-fused]
 
 ``--check-fused`` additionally verifies that a sampled cohort at
 participation = 1.0 with deadline = ∞ reproduces the paper-scale
 ``run_simulation`` trajectory bit-for-bit.
+
+``--downlink digest`` switches the downlink to the scalar round-digest
+discipline (DESIGN §9): clients become stateful, sampled members catch
+up through the bounded round log (dense fallback past ``--log-window``
+rounds), and the cost totals show a dimension-free downlink.
 """
 from __future__ import annotations
 
@@ -67,6 +73,8 @@ def main():
     ap.add_argument("--staleness-beta", type=float, default=0.0)
     ap.add_argument("--round-period-s", type=float, default=math.inf)
     ap.add_argument("--drop-prob", type=float, default=0.0)
+    ap.add_argument("--downlink", default="dense", choices=["dense", "digest"])
+    ap.add_argument("--log-window", type=int, default=64)
     ap.add_argument("--shards", type=int, default=20)
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
@@ -86,6 +94,8 @@ def main():
         participation=args.participation,
         sampler=args.sampler,
         scalar_format=args.scalar,
+        downlink_mode=args.downlink,
+        downlink_log_window=args.log_window,
         eval_every=args.eval_every,
         seed=args.seed,
         server=ServerConfig(
@@ -124,12 +134,20 @@ def main():
     print(f"  dropped @ deadline : {int(h['dropped_deadline'].sum())}")
     print(f"  dropped too-stale  : {int(h['dropped_stale'].sum())}")
 
-    print("\n== cost-model totals (eqs. 12–13) ==")
+    print("\n== two-sided cost-model totals (eqs. 12′–13′, DESIGN §9) ==")
     print(f"  uplink   : {h['cum_bits'][-1]:.3g} bits "
           f"({h['bits_per_client_per_round']} bits/client/round)")
-    print(f"  downlink : {h['cum_downlink_bits'][-1]:.3g} bits (broadcast)")
-    print(f"  wall     : {h['cum_wall_s'][-1]:.3g} s")
-    print(f"  energy   : {h['cum_energy_j'][-1]:.3g} J")
+    ds = h["downlink_stats"]
+    print(f"  downlink : {h['cum_downlink_bits'][-1]:.3g} bits "
+          f"[{h['downlink_mode']}] (broadcast {ds['broadcast_bits']:.3g} + "
+          f"catch-up {ds['catchup_bits']:.3g}; "
+          f"{ds['dense_resyncs']} dense resyncs)")
+    print(f"  wall     : {h['cum_wall_s'][-1] + h['cum_downlink_wall_s'][-1]:.3g} s "
+          f"(uplink {h['cum_wall_s'][-1]:.3g} + "
+          f"downlink {h['cum_downlink_wall_s'][-1]:.3g})")
+    print(f"  energy   : {h['cum_energy_j'][-1] + h['cum_downlink_energy_j'][-1]:.3g} J "
+          f"(uplink {h['cum_energy_j'][-1]:.3g} + "
+          f"downlink {h['cum_downlink_energy_j'][-1]:.3g})")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,15 @@ re-run the cost accounting with the identical per-upload channel draws
 "tdma"``.  Used by ``benchmarks/run.py`` (→ ``experiments/baselines/
 tradeoff.csv`` → report §Baselines) and ``examples/
 baseline_tradeoff.py``.
+
+The **two-sided** sweep (:func:`downlink_tradeoff` → ``experiments/
+downlink/tradeoff.csv`` → report §Downlink, DESIGN §9) adds the
+downlink axis: FedScalar under the ``digest`` discipline (O(C·k)
+round-digest broadcast, stateful client replay) vs every protocol's
+``dense`` d·32-bit model broadcast.  The shape it must reproduce:
+FedScalar's **total** (uplink + downlink) round traffic is independent
+of d under digests, while FedScalar-dense, FedAvg and QSGD all remain
+Θ(d) once the downlink is priced.
 """
 from __future__ import annotations
 
@@ -33,14 +42,30 @@ import numpy as np
 
 from repro.fed.costmodel import ChannelConfig, replay_round_costs
 
-__all__ = ["TRADEOFF_CSV", "TRADEOFF_COLUMNS", "baseline_tradeoff", "write_tradeoff_csv"]
+__all__ = [
+    "TRADEOFF_CSV", "TRADEOFF_COLUMNS", "baseline_tradeoff",
+    "write_tradeoff_csv",
+    "DOWNLINK_CSV", "DOWNLINK_COLUMNS", "downlink_tradeoff",
+    "write_downlink_csv",
+]
 
 TRADEOFF_CSV = "experiments/baselines/tradeoff.csv"
 
 TRADEOFF_COLUMNS = (
     "protocol", "access", "d", "bits_per_client_per_round", "rounds",
-    "final_accuracy", "total_uplink_bits", "total_wall_s", "total_energy_j",
+    "final_accuracy", "total_uplink_bits", "total_downlink_bits",
+    "total_traffic_bits", "total_wall_s", "total_energy_j",
     "acc_at_1e6_bits", "acc_at_1250_s", "acc_at_50_j",
+)
+
+DOWNLINK_CSV = "experiments/downlink/tradeoff.csv"
+
+DOWNLINK_COLUMNS = (
+    "protocol", "downlink", "d", "rounds",
+    "uplink_bits_per_client_per_round", "downlink_bits_per_round",
+    "round_traffic_bits", "total_uplink_bits", "total_downlink_bits",
+    "total_traffic_bits", "total_wall_s", "total_energy_j",
+    "final_accuracy",
 )
 
 # Accuracy-at-budget points (match benchmarks.run figs 4–6).
@@ -118,6 +143,8 @@ def baseline_tradeoff(
                     d, seed)
                 hm = dict(h, cum_bits=bits, cum_wall_s=wall,
                           cum_energy_j=energy)
+                # downlink is one broadcast per round, access-independent
+                dl_total = float(h["cum_downlink_bits"][-1])
                 rows.append(dict(
                     protocol=proto,
                     access=acc_mode,
@@ -126,6 +153,8 @@ def baseline_tradeoff(
                     rounds=rounds,
                     final_accuracy=float(h["accuracy"][-1]),
                     total_uplink_bits=float(bits[-1]),
+                    total_downlink_bits=dl_total,
+                    total_traffic_bits=float(bits[-1]) + dl_total,
                     total_wall_s=float(wall[-1]),
                     total_energy_j=float(energy[-1]),
                     acc_at_1e6_bits=_acc_at(hm, "cum_bits", _BITS_BUDGET),
@@ -135,15 +164,94 @@ def baseline_tradeoff(
     return rows
 
 
-def write_tradeoff_csv(rows: list[dict], path: str = TRADEOFF_CSV) -> str:
-    """Write the sweep rows → ``path`` (report §Baselines artifact)."""
+def _write_csv(rows: list[dict], columns: Sequence[str], path: str) -> str:
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
-        f.write(",".join(TRADEOFF_COLUMNS) + "\n")
+        f.write(",".join(columns) + "\n")
         for r in rows:
             vals = []
-            for c in TRADEOFF_COLUMNS:
+            for c in columns:
                 v = r[c]
                 vals.append(f"{v:.6g}" if isinstance(v, float) else str(v))
             f.write(",".join(vals) + "\n")
     return path
+
+
+def write_tradeoff_csv(rows: list[dict], path: str = TRADEOFF_CSV) -> str:
+    """Write the sweep rows → ``path`` (report §Baselines artifact)."""
+    return _write_csv(rows, TRADEOFF_COLUMNS, path)
+
+
+def downlink_tradeoff(
+    rounds: int = 150,
+    hidden_sizes: Sequence[tuple] = ((24, 12), (48, 24)),
+    num_clients: int = 20,
+    bandwidth_bps: float = 0.1e6,
+    seed: int = 0,
+) -> list[dict]:
+    """Two-sided traffic sweep → one row per (protocol, downlink, d).
+
+    Runs fedscalar under **both** downlink disciplines (digest and
+    dense) plus the dense-only baselines through ``run_federation`` at
+    the paper regime, reading the engine's own two-sided accounting
+    (``cum_downlink_*`` histories, DESIGN §9).  The acceptance shape:
+    the ``fedscalar × digest`` row's ``round_traffic_bits`` is the same
+    at every d — header + N·(ξ + r) scalars + N·64-bit uploads — while
+    every dense-downlink row scales Θ(d).  Wall/energy are the honest
+    (12′)/(13′) totals: uplink + downlink.
+    """
+    from repro.core.projection import tree_size
+    from repro.data import (
+        load_digits,
+        make_client_datasets,
+        train_test_split_arrays,
+    )
+    from repro.fed.runtime import RuntimeConfig, run_federation
+    from repro.models.mlp_classifier import init_mlp
+
+    x, y = load_digits()
+    xtr, ytr, xte, yte = train_test_split_arrays(x, y)
+    clients = make_client_datasets(xtr, ytr, num_clients)
+
+    combos = (("fedscalar", "digest"), ("fedscalar", "dense"),
+              ("fedavg", "dense"), ("qsgd", "dense"))
+    rows = []
+    for hidden in hidden_sizes:
+        sizes = (64,) + tuple(hidden) + (10,)
+        p0 = init_mlp(sizes=sizes, seed=seed)
+        d = tree_size(p0)
+        for proto, dmode in combos:
+            cfg = RuntimeConfig(
+                rounds=rounds, population=num_clients, participation=1.0,
+                protocol_name=proto, downlink_mode=dmode, seed=seed,
+                channel=ChannelConfig(bandwidth_bps=bandwidth_bps,
+                                      num_clients=num_clients))
+            h = run_federation(cfg, p0, clients, xte, yte)
+            up_total = float(h["cum_bits"][-1])
+            dl_total = float(h["cum_downlink_bits"][-1])
+            rows.append(dict(
+                protocol=proto,
+                downlink=dmode,
+                d=d,
+                rounds=rounds,
+                uplink_bits_per_client_per_round=int(
+                    h["bits_per_client_per_round"]),
+                downlink_bits_per_round=dl_total / rounds,
+                round_traffic_bits=(
+                    num_clients * h["bits_per_client_per_round"]
+                    + dl_total / rounds),
+                total_uplink_bits=up_total,
+                total_downlink_bits=dl_total,
+                total_traffic_bits=up_total + dl_total,
+                total_wall_s=float(h["cum_wall_s"][-1]
+                                   + h["cum_downlink_wall_s"][-1]),
+                total_energy_j=float(h["cum_energy_j"][-1]
+                                     + h["cum_downlink_energy_j"][-1]),
+                final_accuracy=float(h["accuracy"][-1]),
+            ))
+    return rows
+
+
+def write_downlink_csv(rows: list[dict], path: str = DOWNLINK_CSV) -> str:
+    """Write the two-sided sweep rows → ``path`` (report §Downlink)."""
+    return _write_csv(rows, DOWNLINK_COLUMNS, path)

@@ -1,17 +1,28 @@
 """System-level cost model: wall-clock (eq. 12), energy (eq. 13), Table I.
 
-    T_wall^(k)  = T_other^(k) + B_upload^(k) / R^(k)          (12)
-    E_round     = P_tx · B_upload / R                          (13)
+    T_wall^(k)  = T_other^(k) + B_down^(k) / R_down + B_upload^(k) / R^(k)   (12′)
+    E_round     = P_down · B_down / R_down + P_tx · B_upload / R             (13′)
 
 with R the uplink bandwidth in bits/s, B_upload the uplink payload in
-bits, P_tx the transmit power.  Following the paper's §III setup:
+bits, P_tx the transmit power — and, new in (12′)/(13′), B_down the
+downlink payload, R_down the downlink bandwidth and P_down the
+broadcast transmit power.  The paper's eqs. (12)–(13) price only the
+uplink; Zheng et al. ("Design and Analysis of Uplink and Downlink
+Communications for Federated Learning") show the downlink dominates
+once the uplink is compressed, so both sides are priced here
+(DESIGN.md §9).  Following the paper's §III setup:
 
 * nominal uplink R = 0.1 Mbps (bandwidth-constrained edge regime),
 * multiplicative lognormal channel variability on R,
 * T_other modeled as a fraction of the *FedAvg* upload time (identical
   for every method — it covers local compute and system overhead),
 * P_tx = 2 W,
-* 32 bits per transmitted float.
+* 32 bits per transmitted float,
+* downlink defaults: R_down = R and P_down = P_tx (symmetric link)
+  unless overridden — the downlink broadcast is **deterministic**
+  (one transmission at the nominal rate, no lognormal draw), so
+  enabling downlink accounting never perturbs the uplink RNG stream
+  and every pre-existing uplink figure is bit-preserved.
 
 Two medium-access schemes (Table I):
 
@@ -19,6 +30,11 @@ Two medium-access schemes (Table I):
   time = max over clients = B/R for homogeneous clients),
 * ``tdma``       — clients transmit sequentially in dedicated slots
   (per-round upload time = N · B/R).
+
+Downlink payload single sources (`*_downlink_bits`): the dense model
+broadcast ships d floats; the FedScalar round digest ships a fixed
+header plus (seed, coefficient, k scalars) per applied upload —
+O(C·k), independent of d (DESIGN §9).
 """
 from __future__ import annotations
 
@@ -32,6 +48,9 @@ __all__ = [
     "upload_bits",
     "dense_upload_bits",
     "quantized_upload_bits",
+    "dense_downlink_bits",
+    "digest_downlink_bits",
+    "DIGEST_HEADER_BITS",
     "replay_round_costs",
     "table1_upload_times",
 ]
@@ -74,6 +93,44 @@ def quantized_upload_bits(d: int, bits: int, num_norms: int = 1,
     return d * bits + num_norms * norm_bits
 
 
+def dense_downlink_bits(d: int, float_bits: int = 32) -> int:
+    """Dense downlink: the server broadcasts the full model, d floats.
+
+    The paper's loop begins "server broadcasts x_k" — a Θ(d) downlink
+    every round that eqs. (12)/(13) never priced.  Single source of the
+    dense-broadcast payload: the ``dense`` :class:`repro.fed.runtime.
+    transport.DownlinkChannel` discipline, every protocol's default
+    ``downlink_bits`` and the catch-up fallback resync all delegate
+    here (DESIGN §9).
+    """
+    return d * float_bits
+
+
+#: Round-digest wire header: round u32 | num_uploads u32 | k u32 | flags u32.
+DIGEST_HEADER_BITS = 128
+
+
+def digest_downlink_bits(num_uploads: int, num_blocks: int = 1,
+                         scalar_bits: int = 32, seed_bits: int = 32,
+                         include_coeffs: bool = True) -> int:
+    """FedScalar digest downlink: O(C·k) scalars, independent of d.
+
+    The server's update is a weighted sum of seed-generated directions,
+    so broadcasting ``(seed, coefficient, r ∈ ℝᵏ)`` per applied upload
+    (plus the :data:`DIGEST_HEADER_BITS` header) lets a stateful client
+    replay the identical parameter step locally — the dimension-free
+    downlink of the DeComFL line of work, transplanted (DESIGN §9).
+    ``include_coeffs=False`` is the uniform-mean digest (full-arrival
+    paper rounds): the per-upload coefficient column is implied 1/C and
+    not shipped.  Single source for :class:`repro.fed.runtime.
+    transport.DigestCodec` and the engine's per-round accounting.
+    """
+    per_upload = seed_bits + num_blocks * scalar_bits
+    if include_coeffs:
+        per_upload += scalar_bits
+    return DIGEST_HEADER_BITS + num_uploads * per_upload
+
+
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
     bandwidth_bps: float = 0.1e6       # nominal uplink R
@@ -86,6 +143,9 @@ class ChannelConfig:
     # Runtime-subsystem extensions (defaults preserve the paper model):
     drop_prob: float = 0.0             # per-upload loss probability
     base_latency_s: float = 0.0        # fixed per-upload access latency
+    # Downlink side of (12′)/(13′); None = symmetric with the uplink.
+    downlink_bandwidth_bps: float | None = None   # R_down
+    p_down_watts: float | None = None             # broadcast transmit power
 
 
 class CostModel:
@@ -142,22 +202,67 @@ class CostModel:
                           deadline_s: float = np.inf) -> tuple[float, float, float]:
         """Aggregate per-upload durations → (bits, wall_s, energy_J).
 
-        Concurrent access: the round's upload phase ends when the
-        slowest member finishes or the deadline cuts it off (dropped
-        and cut-off uploads still occupy the air and burn energy).
-        TDMA: dedicated slots, so (deadline-clipped) durations add.
+        Concurrent access: all uploads start together; the round's
+        upload phase ends when the slowest member finishes or the
+        deadline cuts it off.  TDMA: dedicated slots run sequentially,
+        and the deadline applies to the **cumulative elapsed slot
+        time** — the round ends at ``min(Σ slots, deadline)``, never
+        after the deadline (previously each slot was clipped
+        individually, so K slots could bill up to K·deadline of wall).
+
+        Energy bills each upload's time actually **on air**: the
+        transmit window (access latency excluded), truncated where the
+        deadline cut the round — a client whose upload was cut at the
+        deadline stops radiating at the deadline, it does not burn its
+        full nominal on-air time.  With ``deadline_s=inf`` both fixes
+        are no-ops and the historical figures are bit-preserved.
         """
         n = len(upload_seconds)
         if n == 0:
             return 0.0, float(self.t_other), 0.0
-        tx = upload_seconds - self.ch.base_latency_s   # time actually on air
-        clipped = np.minimum(upload_seconds, deadline_s)
+        base = self.ch.base_latency_s
         if self.ch.access == "tdma":
-            upload_s = float(np.sum(clipped))
+            ends = np.cumsum(upload_seconds)           # cumulative elapsed time
+            starts = ends - upload_seconds
+            upload_s = float(min(ends[-1], deadline_s))
+            # slot i is on air over [start_i + base, end_i] ∩ [0, deadline]
+            air = np.clip(np.minimum(ends, deadline_s) - (starts + base),
+                          0.0, None)
         else:
+            clipped = np.minimum(upload_seconds, deadline_s)
             upload_s = float(np.max(clipped))
-        energy = float(self.ch.p_tx_watts * np.sum(tx))
+            air = np.clip(clipped - base, 0.0, None)
+        energy = float(self.ch.p_tx_watts * np.sum(air))
         return float(n * bits_per_client), self.t_other + upload_s, energy
+
+    # ---- downlink side of (12′)/(13′) ----
+
+    @property
+    def downlink_rate_bps(self) -> float:
+        """R_down — defaults to the uplink's nominal R (symmetric link)."""
+        ch = self.ch
+        rate = ch.downlink_bandwidth_bps \
+            if ch.downlink_bandwidth_bps is not None else ch.bandwidth_bps
+        if rate <= 0:
+            raise ValueError(f"downlink rate must be > 0, got {rate}")
+        return rate
+
+    def downlink_cost(self, bits: float) -> tuple[float, float, float]:
+        """One round's downlink traffic → (bits, wall_s, energy_J).
+
+        Deterministic by design: the broadcast rides the nominal
+        R_down with no lognormal draw, so downlink accounting consumes
+        **zero** draws from the uplink RNG stream — every pre-existing
+        uplink latency/energy figure (and the fused-path replay
+        identity of :func:`replay_round_costs`) stays bit-identical
+        whether or not the downlink is priced.
+        """
+        if bits <= 0:
+            return 0.0, 0.0, 0.0
+        ch = self.ch
+        seconds = bits / self.downlink_rate_bps
+        p_down = ch.p_down_watts if ch.p_down_watts is not None else ch.p_tx_watts
+        return float(bits), float(seconds), float(p_down * seconds)
 
 
 def replay_round_costs(channel: ChannelConfig, bits_per_upload: int,

@@ -54,8 +54,10 @@ from repro.core import fedavg as fa
 from repro.core import fedscalar as fs
 from repro.core import qsgd as q
 from repro.core.projection import leaf_layout, tree_size
+from repro.fed.costmodel import dense_downlink_bits
 from repro.fed.runtime.transport import (
     DenseFrameCodec,
+    DigestCodec,
     QuantizedFrameCodec,
     WireFormat,
 )
@@ -78,6 +80,13 @@ class UplinkProtocol(abc.ABC):
     #: frame codec (WireFormat / DenseFrameCodec / QuantizedFrameCodec)
     wire_codec: Any
 
+    #: downlink disciplines this protocol can serve (DESIGN §9).  Every
+    #: protocol supports the dense model broadcast; only ``fedscalar``
+    #: adds ``"digest"`` — its server update is a weighted sum of
+    #: seed-generated directions, so stateful clients can replay it
+    #: from O(C·k) scalars.  Dense protocols must ship all d values.
+    downlink_modes: tuple = ("dense",)
+
     @property
     def payload_dim(self) -> int:
         return self.wire_codec.payload_dim
@@ -86,6 +95,22 @@ class UplinkProtocol(abc.ABC):
     def upload_bits(self) -> int:
         """Uplink bits per client per round (costmodel single source)."""
         return self.wire_codec.bits_per_upload
+
+    def downlink_bits(self, model_dim: int, float_bits: int = 32) -> int:
+        """Per-round downlink payload under the dense discipline — Θ(d).
+
+        Delegates to :func:`repro.fed.costmodel.dense_downlink_bits`,
+        the single source behind the engine's per-round accounting and
+        the catch-up fallback resync.
+        """
+        return dense_downlink_bits(model_dim, float_bits)
+
+    def digest_codec(self) -> DigestCodec:
+        """→ the round-digest codec (digest-capable protocols only)."""
+        raise ValueError(
+            f"protocol {self.name!r} has no digest downlink: its frames "
+            "carry the information itself, so the server must ship all d "
+            "values every round (DESIGN §9)")
 
     @abc.abstractmethod
     def client_payload(self, delta: Any, seed) -> jax.Array:
@@ -134,12 +159,17 @@ class FedScalarProtocol(UplinkProtocol):
     """
 
     name = "fedscalar"
+    downlink_modes = ("dense", "digest")
 
     def __init__(self, params_like: Any, config: fs.FedScalarConfig,
                  wire: WireFormat | None = None):
         self.config = config
         self.wire_codec = wire if wire is not None else WireFormat(
             num_projections=config.num_projections)
+
+    def digest_codec(self) -> DigestCodec:
+        """Digest frames carry the same k scalars the uplink frames do."""
+        return DigestCodec(num_blocks=self.wire_codec.num_projections)
 
     @classmethod
     def build(cls, params_like, *, fedscalar_config=None, wire_format=None,

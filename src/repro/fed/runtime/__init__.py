@@ -19,8 +19,9 @@ float pytree and are only touched at the single per-round apply.
   sampling (uniform / weighted / Poisson) with inverse-probability
   reweighting so ĝ stays unbiased under partial participation,
 * :mod:`transport` — the actual wire: protocol frames (scalar / dense /
-  quantized — DESIGN §8) serialized to bytes, a downlink broadcast
-  channel, and loss/latency driven by
+  quantized — DESIGN §8) serialized to bytes, the two downlink
+  disciplines (dense model broadcast vs the O(C·k) round digest with
+  its bounded catch-up log — DESIGN §9), and loss/latency driven by
   :class:`repro.fed.costmodel.ChannelConfig`,
 * :mod:`server`    — a streaming aggregator with O(payload) state per
   client, deadline-based round close and staleness-weighted async
@@ -38,6 +39,7 @@ everything else in this package is shared.
 """
 from repro.fed.runtime.engine import (
     RuntimeConfig,
+    StatefulClient,
     draw_cohort_batches,
     run_federation,
 )
@@ -47,7 +49,10 @@ from repro.fed.runtime.transport import (
     WireFormat,
     DenseFrameCodec,
     QuantizedFrameCodec,
-    DownlinkBroadcast,
+    DigestCodec,
+    DownlinkChannel,
+    RoundDigest,
+    RoundLog,
     UplinkChannel,
     decode_upload,
     encode_upload,
@@ -55,9 +60,11 @@ from repro.fed.runtime.transport import (
 
 __all__ = [
     "RuntimeConfig", "run_federation", "draw_cohort_batches",
+    "StatefulClient",
     "ClientPopulation", "Cohort", "CohortSampler",
     "ServerConfig", "StreamingAggregator", "Upload",
     "WireFormat", "DenseFrameCodec", "QuantizedFrameCodec",
-    "UplinkChannel", "DownlinkBroadcast",
+    "UplinkChannel", "DownlinkChannel", "DigestCodec", "RoundDigest",
+    "RoundLog",
     "encode_upload", "decode_upload",
 ]

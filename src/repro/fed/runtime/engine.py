@@ -11,7 +11,11 @@ sweep, not three codebases.
 Per round the engine
 
   1. samples a cohort from the population registry (``sampling``),
-  2. broadcasts the global model (downlink accounting),
+  2. serves the downlink (``transport.DownlinkChannel``, DESIGN §9):
+     under ``dense`` the d·32-bit model broadcast; under ``digest``
+     (fedscalar only) each sampled client first catches up from its
+     last synced round via the bounded round log (dense fallback past
+     the window) — both honestly priced into bits/wall/energy,
   3. runs every cohort member's S local-SGD steps **in fixed-size
      vmapped chunks** through the same ``make_local_sgd`` building
      block all protocols share (fixed chunk shape → one XLA
@@ -31,9 +35,16 @@ Per round the engine
      the IPW-weighted frame mean (uniform full-arrival rounds use the
      exact cohort mean, bit-identical to the ``core`` round functions
      — ``tests/test_protocol_parity.py``),
-  6. charges the round to the bandwidth/energy cost model with the
-     protocol codec's ``bits_per_upload`` (8 bytes for the paper's
-     protocol, Θ(d) for the baselines — the whole point of Table I).
+  6. in digest mode, closes the round by broadcasting its
+     :class:`RoundDigest` — the O(C·k)-scalar summary a
+     :class:`StatefulClient` replays into the **bit-identical**
+     parameter update (the DESIGN §9 invariant; ``verify_replay``
+     asserts it live with a shadow client),
+  7. charges the round to the two-sided bandwidth/energy cost model
+     (eqs. 12′/13′) with the protocol codec's ``bits_per_upload``
+     (8 bytes for the paper's protocol, Θ(d) for the baselines — the
+     whole point of Table I) plus the downlink's broadcast + catch-up
+     traffic.
 
 The projection is pluggable (DESIGN §6): ``family`` selects any
 registered :class:`repro.core.directions.DirectionFamily` and
@@ -74,9 +85,16 @@ from repro.fed.runtime.sampling import (
     sampling_diagnostic,
 )
 from repro.fed.runtime.server import ServerConfig, StreamingAggregator, Upload
-from repro.fed.runtime.transport import DownlinkBroadcast, UplinkChannel, WireFormat
+from repro.fed.runtime.transport import (
+    DownlinkChannel,
+    RoundDigest,
+    RoundLog,
+    UplinkChannel,
+    WireFormat,
+)
 
-__all__ = ["RuntimeConfig", "run_federation", "draw_cohort_batches"]
+__all__ = ["RuntimeConfig", "run_federation", "draw_cohort_batches",
+           "StatefulClient"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +129,15 @@ class RuntimeConfig:
                                         # sharded server apply (DESIGN §7);
                                         # None = single-device apply;
                                         # fedscalar only (DESIGN §8)
+    downlink_mode: str = "dense"        # downlink wire discipline (DESIGN §9):
+                                        # "dense" (d·32-bit model broadcast) or
+                                        # "digest" (O(C·k) round digest +
+                                        # stateful client replay; fedscalar only)
+    downlink_log_window: int = 64       # digest mode: rounds of catch-up log
+                                        # kept before a dense fallback resync
+    verify_replay: bool = False         # digest mode: a shadow StatefulClient
+                                        # replays every digest and the run
+                                        # asserts bit-identity with the server
     server: ServerConfig = dataclasses.field(default_factory=ServerConfig)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
 
@@ -246,6 +273,86 @@ def _pad_bucket(ars: np.ndarray, acoeffs: np.ndarray,
     return rs_b, w_b, seeds_b
 
 
+class StatefulClient:
+    """Client-side downlink state: holds x_j, advances by digest replay.
+
+    The digest discipline (DESIGN §9) makes clients stateful: instead
+    of receiving the d·32-bit model every round, a client keeps its
+    last synced parameters and replays each :class:`RoundDigest`
+    through **the same aggregation path the server ran** — the
+    bucket-padded weighted ``server_apply`` for event-driven rounds,
+    the exact uniform mean for full-arrival (fused) rounds — via the
+    existing seeded-reconstruct machinery.  Because the digest carries
+    exactly the server's ``(seeds, coefficients, scalars)`` and the
+    padding/apply code is shared, the replayed x_{k+1} is
+    **bit-identical** to the server's (``tests/test_downlink.py``).
+
+    The replay is exact when client and server run the same reconstruct
+    path: fori-loop and mesh-sharded applies are bitwise
+    interchangeable (DESIGN §7); the fused Pallas kernel differs by
+    ulps, so a deployment pins ``use_kernel`` consistently on both
+    sides (the engine's ``verify_replay`` shadow mirrors the server's
+    per-round choice).
+    """
+
+    def __init__(self, params: Any, protocol, start_round: int = 0):
+        if "digest" not in protocol.downlink_modes:
+            raise ValueError(f"protocol {protocol.name!r} has no digest "
+                             "downlink to replay (DESIGN §9)")
+        self.params = params
+        self.next_round = start_round
+        self.protocol = protocol
+        self._weighted = jax.jit(
+            lambda p, r, s, w: protocol.server_apply(p, r, s, w))
+        self._weighted_kernel = jax.jit(
+            lambda p, r, s, w: protocol.server_apply(p, r, s, w,
+                                                     use_kernel=True))
+        self._mean = jax.jit(
+            lambda p, r, s: protocol.server_apply(p, r, s, None))
+
+    def apply_digest(self, dg: RoundDigest, use_kernel: bool = False) -> Any:
+        """Replay one round's digest → the post-round parameters."""
+        if dg.round_idx != self.next_round:
+            raise ValueError(f"client holds x_{self.next_round}, cannot "
+                             f"apply digest of round {dg.round_idx}")
+        self.next_round += 1
+        if dg.num_uploads == 0:        # skipped / empty round: no-op
+            return self.params
+        if dg.uniform_mean:
+            self.params = self._mean(self.params, jnp.asarray(dg.rs),
+                                     jnp.asarray(dg.seeds))
+        else:
+            rs_b, w_b, seeds_b = _pad_bucket(dg.rs, dg.coeffs, dg.seeds)
+            fn = self._weighted_kernel if use_kernel else self._weighted
+            self.params = fn(self.params, jnp.asarray(rs_b),
+                             jnp.asarray(seeds_b), jnp.asarray(w_b))
+        return self.params
+
+    def catch_up(self, log: RoundLog, server_params: Any = None) -> dict:
+        """Sync to the log head: replay the suffix, or dense-resync.
+
+        A gap beyond the log window means the suffix was evicted — the
+        client takes one dense model sync (``server_params`` required)
+        exactly as the engine prices it.  → ``dict(mode, rounds_replayed,
+        suffix_bits)``.
+        """
+        bits = log.suffix_bits(self.next_round)
+        if bits is None:
+            if server_params is None:
+                raise ValueError(
+                    f"gap {log.next_round - self.next_round} exceeds the "
+                    f"{log.window}-round log window: dense resync needs "
+                    "server_params")
+            self.params = server_params
+            self.next_round = log.next_round
+            return dict(mode="dense", rounds_replayed=0, suffix_bits=0)
+        frames = log.replay(self.next_round)
+        for dg in frames:
+            self.apply_digest(dg)
+        return dict(mode="digest" if frames else "current",
+                    rounds_replayed=len(frames), suffix_bits=bits)
+
+
 def run_federation(
     cfg: RuntimeConfig,
     init_params: Any,
@@ -284,11 +391,22 @@ def run_federation(
             f"protocol {proto.name!r} cannot use mesh_shape: dense frames "
             "need a d-sized gather per upload on a sharded server "
             "(DESIGN §8); only fedscalar decodes shard-locally")
+    if cfg.downlink_mode not in ("dense", "digest"):
+        raise ValueError(f"unknown downlink_mode {cfg.downlink_mode!r}; "
+                         "want 'dense' or 'digest'")
+    if cfg.downlink_mode == "digest" and "digest" not in proto.downlink_modes:
+        raise ValueError(
+            f"protocol {proto.name!r} cannot use the digest downlink: its "
+            "frames carry the d values themselves, so the server must ship "
+            "the dense model every round (DESIGN §9)")
+    if cfg.verify_replay and cfg.downlink_mode != "digest":
+        raise ValueError("verify_replay checks the digest-replay invariant; "
+                         "set downlink_mode='digest'")
 
     method = _fused_method(cfg, num_shards)
     if method is not None:
         return _run_fused(cfg, init_params, client_sets, x_test, y_test,
-                          method, codec.bits_per_upload, d)
+                          method, proto, d)
 
     cx, cy = _stack_clients(client_sets)          # (#shards, n_per, feat...)
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
@@ -303,7 +421,17 @@ def run_federation(
     cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
                    rng_seed=cfg.seed)
     uplink = UplinkChannel(cm, codec)
-    downlink = DownlinkBroadcast(d, cfg.channel.float_bits)
+    digest_mode = cfg.downlink_mode == "digest"
+    downlink = DownlinkChannel(
+        cm, d, cfg.channel.float_bits, mode=cfg.downlink_mode,
+        digest_codec=proto.digest_codec() if digest_mode else None,
+        log_window=cfg.downlink_log_window)
+    # Digest downlink makes clients stateful: each holds the round it
+    # last synced to (everyone registers holding x₀), and a sampled
+    # client first replays the log suffix — or takes a dense fallback
+    # resync past the window — before computing on x_k (DESIGN §9).
+    client_last = np.zeros(cfg.population, np.int64) if digest_mode else None
+    shadow = StatefulClient(init_params, proto) if cfg.verify_replay else None
     agg = StreamingAggregator(cfg.server)
 
     local = fs.make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
@@ -379,9 +507,10 @@ def run_federation(
     K = cfg.rounds
     hist = {k: np.zeros(K) for k in (
         "loss", "accuracy", "cum_bits", "cum_downlink_bits", "cum_wall_s",
-        "cum_energy_j", "cohort_size", "applied", "applied_stale",
-        "lost_channel", "dropped_deadline", "dropped_stale", "weight_sum",
-        "apply_s")}
+        "cum_energy_j", "cum_downlink_wall_s", "cum_downlink_energy_j",
+        "catchup_bits", "dense_resyncs", "cohort_size", "applied",
+        "applied_stale", "lost_channel", "dropped_deadline", "dropped_stale",
+        "weight_sum", "apply_s")}
     hist["loss"][:] = np.nan
     hist["accuracy"][:] = np.nan
     deadline = cfg.server.deadline_s
@@ -389,10 +518,25 @@ def run_federation(
 
     for k in range(K):
         cohort = sampler.sample(k)
-        downlink_bits = downlink.broadcast()
+        ids = cohort.client_ids
+        if digest_mode:
+            # Catch-up before compute: each sampled client syncs from
+            # its last round to x_k (log-suffix replay, unicast; dense
+            # fallback past the window).  The round's closing digest
+            # broadcast is added at round close.
+            catchup_bits = 0
+            resyncs = 0
+            for cid in ids:
+                b, kind = downlink.catch_up(int(client_last[cid]), k)
+                catchup_bits += b
+                resyncs += kind == "dense"
+            downlink_bits = catchup_bits
+            hist["catchup_bits"][k] = catchup_bits
+            hist["dense_resyncs"][k] = resyncs
+        else:
+            downlink_bits = downlink.broadcast()
 
         # --- client compute, fixed-shape chunks (pad by repeating id 0) ---
-        ids = cohort.client_ids
         c = len(ids)
         rs_np = np.zeros((max(c, 1), proto.payload_dim), np.float32)
         seeds_np = np.zeros(max(c, 1), np.uint32)
@@ -418,11 +562,16 @@ def run_federation(
         # --- round close + model update ---
         aseeds, acoeffs, ars, st = agg.close_round(k)
         a = len(aseeds)
+        use_kernel = False
         if a and not st.skipped:
             t_apply = time.time()
             if proto.name == "fedscalar":
                 rs_b, w_b, seeds_b = _pad_bucket(ars, acoeffs, aseeds)
-                use_kernel = (kern_thresh is not None and a >= kern_thresh
+                # mesh apply ≡ fori bitwise (DESIGN §7), so the shadow
+                # replay must NOT take the kernel path on mesh rounds —
+                # the kernel differs by ulps (DESIGN §9).
+                use_kernel = (mesh is None and kern_thresh is not None
+                              and a >= kern_thresh
                               and (cfg.num_projections == 1
                                    or cfg.projection_mode == "block"))
                 if mesh is not None:
@@ -443,6 +592,27 @@ def run_federation(
                                             jnp.asarray(w_b))
             jax.block_until_ready(jax.tree_util.tree_leaves(params))
             hist["apply_s"][k] = time.time() - t_apply
+
+        # --- digest downlink: close broadcast + stateful client sync ---
+        if digest_mode:
+            applied_round = bool(a) and not st.skipped
+            dg = RoundDigest(
+                round_idx=k,
+                seeds=aseeds if applied_round else np.zeros(0, np.uint32),
+                rs=(ars if applied_round
+                    else np.zeros((0, proto.payload_dim), np.float32)),
+                coeffs=(acoeffs.astype(np.float32) if applied_round
+                        else np.zeros(0, np.float32)))
+            downlink_bits += downlink.broadcast(dg)
+            client_last[ids] = k + 1   # the cohort heard the close broadcast
+            if shadow is not None:
+                shadow.apply_digest(dg, use_kernel=use_kernel)
+                for x, y in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(shadow.params)):
+                    if not np.array_equal(np.asarray(x), np.asarray(y)):
+                        raise AssertionError(
+                            f"digest replay diverged from the server at "
+                            f"round {k} (DESIGN §9 invariant)")
 
         # --- cost accounting ---
         # Sync mode: the round lasts until the deadline cuts the slowest
@@ -470,13 +640,29 @@ def run_federation(
         hist["cum_downlink_bits"][k] = downlink_bits
         hist["cum_wall_s"][k] = wall
         hist["cum_energy_j"][k] = energy
+        # two-sided pricing (12′)/(13′): the round's downlink traffic
+        # (broadcast + catch-up) at the deterministic nominal R_down
+        _, dl_wall, dl_energy = downlink.round_cost(downlink_bits)
+        hist["cum_downlink_wall_s"][k] = dl_wall
+        hist["cum_downlink_energy_j"][k] = dl_energy
         if k % cfg.eval_every == 0 or k == K - 1:
             loss, acc = evaluate(params)
             hist["loss"][k] = float(loss)
             hist["accuracy"][k] = float(acc)
 
-    for key in ("cum_bits", "cum_downlink_bits", "cum_wall_s", "cum_energy_j"):
+    for key in ("cum_bits", "cum_downlink_bits", "cum_wall_s", "cum_energy_j",
+                "cum_downlink_wall_s", "cum_downlink_energy_j"):
         hist[key] = np.cumsum(hist[key])
+
+    # Reconcile the channel's own counter against the per-round history:
+    # every downlink bit (broadcasts + catch-up) must be accounted —
+    # the old DownlinkBroadcast stub accumulated a counter nothing ever
+    # read, so bits could silently vanish.
+    if int(hist["cum_downlink_bits"][-1]) != downlink.total_bits:
+        raise AssertionError(
+            f"downlink accounting leak: channel counted "
+            f"{downlink.total_bits} bits, history recorded "
+            f"{int(hist['cum_downlink_bits'][-1])}")
 
     applied_rounds = hist["apply_s"] > 0
     recon_clients_per_s = (
@@ -496,12 +682,19 @@ def run_federation(
         sampling_diagnostic=sampling_diagnostic(sampler, rounds=min(200, 4 * K)),
         sharding=shard_info,
         recon_clients_per_s=recon_clients_per_s,
+        downlink_mode=cfg.downlink_mode,
+        total_downlink_bits=downlink.total_bits,
+        downlink_stats=dict(
+            broadcast_bits=downlink.broadcast_bits,
+            catchup_bits=downlink.catchup_bits,
+            dense_resyncs=downlink.dense_resyncs),
+        round_log=downlink.log,
         **hist,
     )
 
 
 def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
-               method: str, bits_per_upload: int, d: int) -> dict:
+               method: str, proto, d: int) -> dict:
     """Full-participation sync path → one fused ``lax.scan``.
 
     Delegates to :func:`repro.fed.simulation.run_simulation`, so the
@@ -509,14 +702,26 @@ def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
     ``fedavg``/``qsgd`` that means bit-for-bit the ``core`` round
     functions; only the cost accounting is redone with the runtime's
     per-upload channel draws.
+
+    Digest downlink (fedscalar only): the scan captures each round's
+    uploaded ``(r, ξ)`` (``capture_uploads`` — extra scan outputs, no
+    arithmetic change), the rounds become **uniform-mean digests**
+    (full arrival: the coefficient column is implied 1/N and never
+    rides the wire) appended to the round log, and the per-round
+    downlink is the digest's O(N·k) bits instead of d·32.  Catch-up
+    traffic is zero by construction: full participation means every
+    client hears every close broadcast.
     """
-    from repro.fed.costmodel import replay_round_costs
+    from repro.fed.costmodel import dense_downlink_bits, replay_round_costs
     from repro.fed.simulation import SimulationConfig, run_simulation
 
+    bits_per_upload = proto.wire_codec.bits_per_upload
+    digest_mode = cfg.downlink_mode == "digest"
     sim = SimulationConfig(
         method=method, rounds=cfg.rounds, num_clients=cfg.population,
         local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-        local_lr=cfg.local_lr, seed=cfg.seed, channel=cfg.channel)
+        local_lr=cfg.local_lr, seed=cfg.seed, channel=cfg.channel,
+        capture_uploads=digest_mode)
     h = run_simulation(sim, init_params, client_sets, x_test, y_test)
 
     K, n = cfg.rounds, cfg.population
@@ -524,13 +729,41 @@ def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
         cfg.channel, bits_per_upload, K, n,
         fedavg_bits_per_client=d * cfg.channel.float_bits, rng_seed=cfg.seed)
 
+    cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
+                   rng_seed=cfg.seed)   # downlink_cost draws no RNG
+    round_log = None
+    if digest_mode:
+        round_log = RoundLog(proto.digest_codec(),
+                             window=max(cfg.downlink_log_window, K))
+        dl_bits = np.zeros(K)
+        for k in range(K):
+            dg = RoundDigest(round_idx=k, seeds=h["seed_history"][k],
+                             rs=h["r_history"][k], coeffs=None)
+            dl_bits[k] = round_log.append(dg)
+        if cfg.verify_replay:
+            client = StatefulClient(init_params, proto)
+            client.catch_up(round_log)
+            for x, y in zip(jax.tree_util.tree_leaves(h["final_params"]),
+                            jax.tree_util.tree_leaves(client.params)):
+                if not np.array_equal(np.asarray(x), np.asarray(y)):
+                    raise AssertionError("fused-path digest replay diverged "
+                                         "from run_simulation (DESIGN §9)")
+    else:
+        dl_bits = np.full(K, float(dense_downlink_bits(d, cfg.channel.float_bits)))
+    dl_costs = np.asarray([cm.downlink_cost(b) for b in dl_bits])
+    total_dl = int(dl_bits.sum())
+
     h.update(
         method=f"runtime_{cfg.sampler}_fused",
         protocol=cfg.protocol_name,
         cum_bits=np.cumsum(bits),
-        cum_downlink_bits=np.cumsum(np.full(K, float(d * cfg.channel.float_bits))),
+        cum_downlink_bits=np.cumsum(dl_bits),
         cum_wall_s=np.cumsum(wall),
         cum_energy_j=np.cumsum(energy),
+        cum_downlink_wall_s=np.cumsum(dl_costs[:, 1]),
+        cum_downlink_energy_j=np.cumsum(dl_costs[:, 2]),
+        catchup_bits=np.zeros(K),
+        dense_resyncs=np.zeros(K),
         cohort_size=np.full(K, float(n)),
         applied=np.full(K, float(n)),
         applied_stale=np.zeros(K),
@@ -544,6 +777,11 @@ def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,
         pending_rounds=[],
         sharding=None,
         recon_clients_per_s=0.0,
+        downlink_mode=cfg.downlink_mode,
+        total_downlink_bits=total_dl,
+        downlink_stats=dict(broadcast_bits=total_dl, catchup_bits=0,
+                            dense_resyncs=0),
+        round_log=round_log,
         sampling_diagnostic=dict(empirical_marginal_abs_err=0.0,
                                  estimate_rel_err=0.0),
     )

@@ -1,9 +1,10 @@
-"""The wire: uplink frame codecs, lossy channel, downlink broadcast.
+"""The wire: uplink frame codecs, lossy channel, downlink disciplines.
 
 Everything the paper abstracts as "upload two scalars" is made concrete
 here (DESIGN.md §1/§5; the k-scalar generalization is §6, the protocol
-frame taxonomy §8).  Three frame types ride the uplink, one per
-registered protocol (:mod:`repro.fed.protocols`):
+frame taxonomy §8, the downlink disciplines §9).  Three frame types
+ride the uplink, one per registered protocol
+(:mod:`repro.fed.protocols`):
 
     scalar    [ r₀ … r_{k−1} | ξ ]       k scalars + u32 seed (fedscalar)
     dense     [ δ₀ … δ_{d−1} ]           d values at scalar width (fedavg)
@@ -32,6 +33,19 @@ The channel model rides on :class:`repro.fed.costmodel.CostModel`: one
 independent lognormal rate draw per upload gives per-upload latencies
 (this is what makes stragglers), ``ChannelConfig.drop_prob`` loses
 packets outright, and ``base_latency_s`` adds fixed access overhead.
+
+The downlink (DESIGN §9) has **two wire disciplines**:
+
+* ``dense``  — the status quo: the server broadcasts the full model,
+  d floats per round (now honestly priced into wall/energy),
+* ``digest`` — FedScalar only: the server broadcasts a
+  :class:`RoundDigest` — ``(round, seeds, coefficients, scalars)`` for
+  the round's applied uploads, O(C·k) scalars independent of d — and
+  **stateful clients** replay the identical parameter update locally
+  from the seeded directions.  A bounded :class:`RoundLog` keeps the
+  last W encoded digests so a client that missed rounds fetches the
+  log suffix and replays forward; a gap beyond the window falls back
+  to one dense model sync.
 """
 from __future__ import annotations
 
@@ -40,8 +54,11 @@ import dataclasses
 import numpy as np
 
 from repro.fed.costmodel import (
+    DIGEST_HEADER_BITS,
     CostModel,
+    dense_downlink_bits,
     dense_upload_bits,
+    digest_downlink_bits,
     quantized_upload_bits,
     upload_bits,
 )
@@ -55,7 +72,10 @@ __all__ = [
     "decode_upload",
     "UplinkChannel",
     "TransmitResult",
-    "DownlinkBroadcast",
+    "RoundDigest",
+    "DigestCodec",
+    "RoundLog",
+    "DownlinkChannel",
 ]
 
 
@@ -118,6 +138,36 @@ class WireFormat:
     def decode(self, buf: bytes) -> tuple[np.ndarray, int]:
         return decode_upload(buf, self)
 
+    def encode_batch(self, payloads: np.ndarray, seeds: np.ndarray) -> bytes:
+        """Vectorized cohort encode: C concatenated frames, one call.
+
+        Byte-identical to ``b"".join(encode(row, seed) …)`` (asserted
+        in ``tests/test_statistical.py``) without the O(C) interpreter
+        round-trips — the 100k-client uplink runs through here.
+        """
+        c = len(seeds)
+        payloads = np.ascontiguousarray(
+            np.asarray(payloads, np.float32).reshape(c, self.num_projections))
+        body = np.ascontiguousarray(payloads.astype(self.scalar_dtype))
+        w = self.scalar_dtype.itemsize * self.num_projections
+        buf = np.empty((c, self.bytes_per_upload), np.uint8)
+        buf[:, :w] = body.view(np.uint8).reshape(c, w)
+        buf[:, w:] = np.ascontiguousarray(
+            np.asarray(seeds, "<u4")).view(np.uint8).reshape(c, 4)
+        return buf.tobytes()
+
+    def decode_batch(self, buf: bytes, count: int) -> tuple[np.ndarray, np.ndarray]:
+        """→ (float32 (C, k) payloads, uint32 (C,) seeds) — exact inverse."""
+        if len(buf) != count * self.bytes_per_upload:
+            raise ValueError(
+                f"batch is {len(buf)} B, expected {count * self.bytes_per_upload}")
+        rows = np.frombuffer(buf, np.uint8).reshape(count, self.bytes_per_upload)
+        w = self.scalar_dtype.itemsize * self.num_projections
+        body = np.ascontiguousarray(rows[:, :w]).view(self.scalar_dtype)
+        seeds = np.ascontiguousarray(rows[:, w:]).view("<u4").reshape(count)
+        return body.astype(np.float32).reshape(count, self.num_projections), \
+            seeds.astype(np.uint32)
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseFrameCodec:
@@ -165,6 +215,22 @@ class DenseFrameCodec:
             raise ValueError(f"packet is {len(buf)} B, expected {self.bytes_per_upload}")
         vals = np.frombuffer(buf, dtype=self.scalar_dtype, count=self.d)
         return vals.astype(np.float32), 0
+
+    def encode_batch(self, payloads: np.ndarray,
+                     seeds: np.ndarray | None = None) -> bytes:
+        """Vectorized cohort encode — C dense frames, byte-identical to
+        concatenating :meth:`encode` per row (seedless frames: the seed
+        argument exists only for interface uniformity)."""
+        del seeds
+        payloads = np.asarray(payloads, np.float32).reshape(-1, self.d)
+        return np.ascontiguousarray(payloads.astype(self.scalar_dtype)).tobytes()
+
+    def decode_batch(self, buf: bytes, count: int) -> tuple[np.ndarray, np.ndarray]:
+        if len(buf) != count * self.bytes_per_upload:
+            raise ValueError(
+                f"batch is {len(buf)} B, expected {count * self.bytes_per_upload}")
+        vals = np.frombuffer(buf, dtype=self.scalar_dtype).reshape(count, self.d)
+        return vals.astype(np.float32), np.zeros(count, np.uint32)
 
     @property
     def scalar_dtype(self) -> np.dtype:
@@ -237,6 +303,34 @@ class QuantizedFrameCodec:
                               offset=self.d)
         return np.concatenate([levels, norms.astype(np.float32)]), 0
 
+    def encode_batch(self, payloads: np.ndarray,
+                     seeds: np.ndarray | None = None) -> bytes:
+        """Vectorized cohort encode — byte-identical to per-row encode."""
+        del seeds
+        payloads = np.asarray(payloads, np.float32).reshape(-1, self.payload_dim)
+        c = payloads.shape[0]
+        levels = payloads[:, :self.d]
+        lim = (1 << (self.bits - 1)) - 1
+        if np.any(np.abs(levels) > lim) or np.any(levels != np.round(levels)):
+            raise ValueError(f"level codes must be integers in ±{lim}")
+        buf = np.empty((c, self.bytes_per_upload), np.uint8)
+        buf[:, :self.d] = levels.astype(np.int8).view(np.uint8)
+        buf[:, self.d:] = np.ascontiguousarray(
+            payloads[:, self.d:].astype("<f4")).view(np.uint8).reshape(
+                c, 4 * self.num_norms)
+        return buf.tobytes()
+
+    def decode_batch(self, buf: bytes, count: int) -> tuple[np.ndarray, np.ndarray]:
+        if len(buf) != count * self.bytes_per_upload:
+            raise ValueError(
+                f"batch is {len(buf)} B, expected {count * self.bytes_per_upload}")
+        rows = np.frombuffer(buf, np.uint8).reshape(count, self.bytes_per_upload)
+        levels = np.ascontiguousarray(
+            rows[:, :self.d]).view(np.int8).astype(np.float32)
+        norms = np.ascontiguousarray(
+            rows[:, self.d:]).view("<f4").astype(np.float32)
+        return np.concatenate([levels, norms], axis=1), np.zeros(count, np.uint32)
+
 
 def encode_upload(r: np.ndarray, seed: int, fmt: WireFormat) -> bytes:
     """Serialize one client's upload → ``fmt.bytes_per_upload`` bytes."""
@@ -289,15 +383,15 @@ class UplinkChannel:
         Every upload really goes through bytes: the payloads the server
         aggregates are the *decoded* ones, so fp16/bf16 wire widths are
         honestly lossy while fp32 (and integer level codes) are
-        byte-exact.
+        byte-exact.  Serialization runs through the codec's vectorized
+        batch path — byte-identical to per-frame encode/decode
+        (``tests/test_statistical.py``) without O(C) interpreter
+        round-trips per round.
         """
-        rs = np.asarray(rs, np.float32).reshape(len(seeds), -1)
         c = len(seeds)
-        r_hat = np.empty_like(rs)
-        seeds_hat = np.empty(c, np.uint32)
-        for i in range(c):
-            packet = self.fmt.encode(rs[i], int(seeds[i]))
-            r_hat[i], seeds_hat[i] = self.fmt.decode(packet)
+        rs = np.asarray(rs, np.float32).reshape(c, -1)
+        blob = self.fmt.encode_batch(rs, np.asarray(seeds, np.uint32))
+        r_hat, seeds_hat = self.fmt.decode_batch(blob, c)
         latency = self.cm.per_client_upload_seconds(self.fmt.bits_per_upload, c)
         lost = self.cm.per_client_drops(c)
         return TransmitResult(
@@ -305,16 +399,254 @@ class UplinkChannel:
             payload_bytes=c * self.fmt.bytes_per_upload)
 
 
-class DownlinkBroadcast:
-    """Server → cohort model broadcast (one transmission, wireless)."""
+# ---------------------------------------------------------------------------
+# downlink: round digests, the bounded catch-up log, and the channel
+# ---------------------------------------------------------------------------
 
-    def __init__(self, model_dim: int, float_bits: int = 32):
-        self.bits_per_round = model_dim * float_bits
+
+@dataclasses.dataclass(frozen=True)
+class RoundDigest:
+    """One round's server update as scalars: enough to replay it locally.
+
+    The FedScalar server step is x ← x + lr·Σᵢ cᵢ·rᵢⱼ·vⱼ(ξᵢ) — a
+    weighted sum of seed-generated directions — so ``(seeds, coeffs,
+    rs)`` for the round's applied uploads *is* the update (DESIGN §9).
+    A stateful client feeds the digest through the identical
+    aggregation code path (:class:`repro.fed.runtime.engine.
+    StatefulClient`), reproducing the server's new parameters
+    bit-for-bit.
+
+    ``coeffs=None`` marks a uniform-mean round (full arrival, the
+    paper's aggregation): replay uses the exact 1/A mean path and the
+    coefficient column never rides the wire.  An empty digest
+    (``num_uploads == 0``) is a recorded no-op round — the log stays
+    contiguous across skipped rounds.
+    """
+
+    round_idx: int
+    seeds: np.ndarray                 # (A,) uint32 cohort seeds ξ
+    rs: np.ndarray                    # (A, k) float32 decoded upload scalars
+    coeffs: np.ndarray | None = None  # (A,) float32 HT×staleness weights
+
+    @property
+    def num_uploads(self) -> int:
+        return int(self.seeds.shape[0])
+
+    @property
+    def uniform_mean(self) -> bool:
+        return self.coeffs is None
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.rs.shape[1]) if self.rs.ndim == 2 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class DigestCodec:
+    """Round-digest wire format, little-endian (DESIGN §9):
+
+        [ round u32 | A u32 | k u32 | flags u32 |
+          ξ₀ … ξ_{A−1} u32 | (c₀ … c_{A−1} f32)? | r₀ … r_{A·k−1} f32 ]
+
+    flags bit 0 marks a uniform-mean digest (no coefficient column).
+    ``bits_for`` delegates to :func:`repro.fed.costmodel.
+    digest_downlink_bits`, so the engine's accounting and the bytes
+    actually serialized share one source — asserted per encode.
+    """
+
+    num_blocks: int = 1
+
+    _UNIFORM_FLAG = 0x1
+
+    def bits_for(self, num_uploads: int, include_coeffs: bool = True) -> int:
+        return digest_downlink_bits(num_uploads, self.num_blocks,
+                                    include_coeffs=include_coeffs)
+
+    def encode(self, dg: RoundDigest) -> bytes:
+        a = dg.num_uploads
+        rs = np.ascontiguousarray(np.asarray(dg.rs, np.float32))
+        rs = rs.reshape(a, -1) if a else np.zeros((0, self.num_blocks),
+                                                  np.float32)
+        if a and rs.shape[1] != self.num_blocks:
+            raise ValueError(f"digest carries k={rs.shape[1]} scalars per "
+                             f"upload, codec expects {self.num_blocks}")
+        flags = self._UNIFORM_FLAG if dg.uniform_mean else 0
+        head = np.asarray([dg.round_idx, a, self.num_blocks, flags],
+                          "<u4").tobytes()
+        body = np.ascontiguousarray(np.asarray(dg.seeds, "<u4")).tobytes()
+        if not dg.uniform_mean:
+            body += np.ascontiguousarray(
+                np.asarray(dg.coeffs, "<f4")).tobytes()
+        buf = head + body + rs.astype("<f4").tobytes()
+        assert len(buf) * 8 == self.bits_for(a, not dg.uniform_mean), \
+            "digest serializer drifted from digest_downlink_bits"
+        return buf
+
+    def decode(self, buf: bytes) -> RoundDigest:
+        round_idx, a, k, flags = (int(v) for v in
+                                  np.frombuffer(buf, "<u4", count=4))
+        if k != self.num_blocks:
+            raise ValueError(f"digest has k={k}, codec expects {self.num_blocks}")
+        uniform = bool(flags & self._UNIFORM_FLAG)
+        if len(buf) * 8 != self.bits_for(a, include_coeffs=not uniform):
+            raise ValueError(f"digest is {len(buf)} B, expected "
+                             f"{self.bits_for(a, not uniform) // 8}")
+        off = 16
+        seeds = np.frombuffer(buf, "<u4", count=a, offset=off).astype(np.uint32)
+        off += 4 * a
+        coeffs = None
+        if not uniform:
+            coeffs = np.frombuffer(buf, "<f4", count=a,
+                                   offset=off).astype(np.float32)
+            off += 4 * a
+        rs = np.frombuffer(buf, "<f4", count=a * k, offset=off).astype(
+            np.float32).reshape(a, k)
+        return RoundDigest(round_idx=round_idx, seeds=seeds, rs=rs,
+                           coeffs=coeffs)
+
+
+class RoundLog:
+    """Bounded log of encoded round digests — the catch-up path.
+
+    Keeps the last ``window`` encoded digests in append order.  A
+    client that missed rounds fetches the contiguous suffix from its
+    last applied round and replays forward; once the gap exceeds the
+    window the suffix is gone and the caller must fall back to a dense
+    model sync (DESIGN §9).  Digests are stored *encoded* so the log's
+    memory is exactly the bits a real server would retain, and replay
+    decodes through the same codec the wire uses.
+    """
+
+    def __init__(self, codec: DigestCodec, window: int = 64):
+        if window < 1:
+            raise ValueError(f"log window must be ≥ 1, got {window}")
+        self.codec = codec
+        self.window = int(window)
+        self._frames: dict[int, bytes] = {}
+        # prefix[r] = total encoded bits of digests [0, r); kept for the
+        # retained range so suffix_bits is O(1) — the engine prices a
+        # catch-up per sampled client per round, which must not become
+        # an O(cohort · window) interpreter loop at 100k-client scale.
+        self._prefix: dict[int, int] = {0: 0}
+        self._next = 0
+
+    @property
+    def next_round(self) -> int:
+        """The round index the next appended digest must carry."""
+        return self._next
+
+    def append(self, dg: RoundDigest) -> int:
+        """Append round ``next_round``'s digest → its encoded bits."""
+        if dg.round_idx != self._next:
+            raise ValueError(
+                f"log expects round {self._next}, got {dg.round_idx}")
+        buf = self.codec.encode(dg)
+        self._frames[dg.round_idx] = buf
+        self._prefix[self._next + 1] = self._prefix[self._next] + len(buf) * 8
+        self._next += 1
+        evict = self._next - self.window - 1
+        if evict in self._frames:
+            del self._frames[evict]
+            del self._prefix[evict]
+        return len(buf) * 8
+
+    def suffix_bits(self, from_round: int) -> int | None:
+        """Bits to ship digests [from_round, next_round); None = evicted.
+
+        O(1): a prefix-sum difference over the retained range.
+        """
+        if from_round >= self._next:
+            return 0
+        if from_round < self._next - self.window or from_round < 0:
+            return None
+        return self._prefix[self._next] - self._prefix[from_round]
+
+    def replay(self, from_round: int) -> list[RoundDigest] | None:
+        """Decode the suffix [from_round, next_round); None = evicted."""
+        if self.suffix_bits(from_round) is None:
+            return None
+        return [self.codec.decode(self._frames[k])
+                for k in range(from_round, self._next)]
+
+
+class DownlinkChannel:
+    """Server → clients downlink under one of two wire disciplines.
+
+    ``dense``  — every round broadcasts the full model: ``d ·
+    float_bits`` bits (one wireless transmission serves the cohort),
+    and sampled clients are always current.  This is the paper's
+    "server broadcasts x_k", previously counted but never priced.
+
+    ``digest`` — the round's closing :class:`RoundDigest` is broadcast
+    (O(C·k) scalars) and appended to the bounded :class:`RoundLog`;
+    a client sampled after missing rounds first pays the **catch-up**
+    traffic — the unicast log suffix from its last synced round, or a
+    dense fallback resync when the gap exceeds the log window.
+
+    ``total_bits`` accumulates *all* downlink traffic (broadcasts +
+    catch-up) and is reconciled against the engine's per-round history
+    at the end of every run, so bits cannot silently vanish (the old
+    ``DownlinkBroadcast`` stub counted them into a field nothing read).
+    """
+
+    def __init__(self, cost_model: CostModel, model_dim: int,
+                 float_bits: int = 32, mode: str = "dense",
+                 digest_codec: DigestCodec | None = None,
+                 log_window: int = 64):
+        if mode not in ("dense", "digest"):
+            raise ValueError(f"unknown downlink mode {mode!r}; "
+                             "want 'dense' or 'digest'")
+        if mode == "digest" and digest_codec is None:
+            raise ValueError("digest downlink needs a DigestCodec")
+        self.cm = cost_model
+        self.mode = mode
+        self.dense_bits = dense_downlink_bits(model_dim, float_bits)
+        self.log = RoundLog(digest_codec, log_window) if mode == "digest" else None
         self.total_bits = 0
+        self.broadcast_bits = 0
+        self.catchup_bits = 0
+        self.dense_resyncs = 0
         self.rounds = 0
 
-    def broadcast(self) -> int:
-        """Account one round's broadcast; → bits sent this round."""
-        self.total_bits += self.bits_per_round
+    def broadcast(self, digest: RoundDigest | None = None) -> int:
+        """Account one round's closing broadcast → bits sent.
+
+        Dense mode ignores ``digest``; digest mode requires it (an
+        empty digest for skipped rounds keeps the log contiguous).
+        """
+        if self.mode == "dense":
+            bits = self.dense_bits
+        else:
+            if digest is None:
+                raise ValueError("digest downlink: every round must "
+                                 "broadcast a RoundDigest (empty for no-ops)")
+            bits = self.log.append(digest)
+        self.total_bits += bits
+        self.broadcast_bits += bits
         self.rounds += 1
-        return self.bits_per_round
+        return bits
+
+    def catch_up(self, client_round: int, target_round: int) -> tuple[int, str]:
+        """Price one sampled client's sync to ``target_round``.
+
+        → ``(bits, kind)`` with kind ``'current'`` (no gap),
+        ``'digest'`` (log-suffix replay) or ``'dense'`` (gap beyond
+        the log window → full model resync).  Dense mode is always
+        current: the per-round broadcast already ships the model.
+        """
+        if self.mode == "dense" or client_round >= target_round:
+            return 0, "current"
+        bits = self.log.suffix_bits(client_round)
+        if bits is None:
+            self.total_bits += self.dense_bits
+            self.catchup_bits += self.dense_bits
+            self.dense_resyncs += 1
+            return self.dense_bits, "dense"
+        self.total_bits += bits
+        self.catchup_bits += bits
+        return bits, "digest"
+
+    def round_cost(self, bits: float) -> tuple[float, float, float]:
+        """(bits, wall_s, energy_J) of one round's downlink traffic —
+        deterministic, via :meth:`CostModel.downlink_cost` (12′)/(13′)."""
+        return self.cm.downlink_cost(bits)

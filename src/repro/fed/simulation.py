@@ -60,10 +60,21 @@ class SimulationConfig:
     seed: int = 0
     eval_every: int = 10
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    # Record every round's uploaded (r, ξ) in the history (fedscalar
+    # methods only) — the fused engine path uses this to build the
+    # digest-downlink round log (DESIGN §9).  Adds scan outputs but no
+    # arithmetic: the trajectory is unchanged bit-for-bit.
+    capture_uploads: bool = False
 
 
 def _protocol(cfg: SimulationConfig):
-    """→ (round_fn(params, batches, k, ef), bits_per_client_fn, uses_ef)."""
+    """→ (round_fn(params, batches, k, ef), bits_per_client_fn, uses_ef).
+
+    ``round_fn`` returns ``(new_params, new_ef, uploads)`` where
+    ``uploads`` is the round's ``(r, seeds)`` pair for fedscalar
+    methods (the digest-downlink capture source) and ``None`` for the
+    dense baselines.
+    """
     m = cfg.method
     base = dict(local_steps=cfg.local_steps, local_lr=cfg.local_lr)
     if m.startswith("fedscalar"):
@@ -89,7 +100,7 @@ def _protocol(cfg: SimulationConfig):
             new_params, (aux, new_ef) = fs.fedscalar_round(
                 params, batches, k, mlp_grad, pc, ef
             )
-            return new_params, new_ef
+            return new_params, new_ef, (aux["r"], aux["seeds"])
 
         return round_fn, lambda p: fs.upload_bits_per_client(p, pc), pc.error_feedback
     if m == "fedavg":
@@ -97,7 +108,7 @@ def _protocol(cfg: SimulationConfig):
 
         def round_fn(params, batches, k, ef):
             new_params, _ = fa.fedavg_round(params, batches, k, mlp_grad, pc)
-            return new_params, ef
+            return new_params, ef, None
 
         return round_fn, lambda p: fa.upload_bits_per_client(p, pc), False
     if m == "qsgd":
@@ -105,7 +116,7 @@ def _protocol(cfg: SimulationConfig):
 
         def round_fn(params, batches, k, ef):
             new_params, _ = q.qsgd_round(params, batches, k, mlp_grad, pc)
-            return new_params, ef
+            return new_params, ef, None
 
         return round_fn, lambda p: q.upload_bits_per_client(p, pc), False
     raise ValueError(f"unknown method {m!r}")
@@ -138,6 +149,11 @@ def run_simulation(
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
     S, B = cfg.local_steps, cfg.batch_size
 
+    if cfg.capture_uploads and not cfg.method.startswith("fedscalar"):
+        raise ValueError(
+            f"capture_uploads needs a fedscalar method (uploads are (r, ξ) "
+            f"scalars); {cfg.method!r} frames are Θ(d)")
+
     def scan_step(carry, k):
         params, ef = carry
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), k)
@@ -146,10 +162,12 @@ def run_simulation(
             cfg.num_clients, S * B, 1, 1), axis=1).reshape(cfg.num_clients, S, B, 64)
         by = jnp.take_along_axis(cy, idx.reshape(cfg.num_clients, S * B), axis=1
                                  ).reshape(cfg.num_clients, S, B)
-        params, ef = round_fn(params, (bx, by), k, ef)
+        params, ef, uploads = round_fn(params, (bx, by), k, ef)
         # metrics on the *global* model (paper Figs 2-3 track these)
         loss = mlp_loss(params, (xt, yt))
         acc = mlp_accuracy(params, xt, yt)
+        if cfg.capture_uploads:
+            return (params, ef), (loss, acc, uploads[0], uploads[1])
         return (params, ef), (loss, acc)
 
     ef0 = None
@@ -167,8 +185,15 @@ def run_simulation(
     compiled = run_rounds.lower((init_params, ef0), ks).compile()
     compile_s = time.time() - t0
     t0 = time.time()
-    (final_params, _), (losses, accs) = jax.block_until_ready(
+    (final_params, _), ys = jax.block_until_ready(
         compiled((init_params, ef0), ks))
+    r_hist = seed_hist = None
+    if cfg.capture_uploads:
+        losses, accs, r_hist, seed_hist = ys
+        r_hist = np.asarray(r_hist)            # (K, N, m)
+        seed_hist = np.asarray(seed_hist)      # (K, N)
+    else:
+        losses, accs = ys
     losses, accs = np.asarray(losses), np.asarray(accs)
     compute_s = time.time() - t0
 
@@ -190,6 +215,8 @@ def run_simulation(
         round=np.arange(1, cfg.rounds + 1),
         loss=losses,
         accuracy=accs,
+        r_history=r_hist,
+        seed_history=seed_hist,
         cum_bits=np.cumsum(bits),
         cum_wall_s=np.cumsum(wall),
         cum_energy_j=np.cumsum(energy),

@@ -1,0 +1,364 @@
+"""Downlink subsystem (DESIGN §9): digest codec, round log, replay.
+
+The core invariant: the ``digest`` downlink is **bit-identical** to
+the ``dense`` broadcast — the server trajectory does not depend on the
+discipline, and a :class:`StatefulClient` replaying the round digests
+(including after missing rounds, through the bounded catch-up log)
+reconstructs the server's parameters bit-for-bit.  These tests are the
+fast tier on purpose (not marked ``slow``): the invariant is the PR
+gate for every change to the wire or the apply path.
+
+Also here: the accounting property test that every protocol's reported
+per-round bits (uplink + downlink) equal the codec-recomputed
+``C·bits_per_upload + downlink_bits`` across protocol × k × width.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.fed.costmodel import (
+    ChannelConfig,
+    dense_downlink_bits,
+    digest_downlink_bits,
+)
+from repro.fed.runtime import (
+    DigestCodec,
+    RoundDigest,
+    RoundLog,
+    RuntimeConfig,
+    ServerConfig,
+    StatefulClient,
+    run_federation,
+)
+from repro.models.mlp_classifier import init_mlp
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.fixture(scope="module")
+def digits8():
+    from repro.data import load_digits, make_client_datasets, train_test_split_arrays
+    x, y = load_digits(n_samples=400)
+    xtr, ytr, xte, yte = train_test_split_arrays(x, y)
+    return make_client_datasets(xtr, ytr, 8), xte, yte
+
+
+# ---------------------------------------------------------------------------
+# digest codec: byte-exact round trips, bits == the costmodel single source
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 4])
+@pytest.mark.parametrize("a", [0, 1, 7])
+def test_digest_codec_roundtrip_weighted(k, a):
+    rng = np.random.RandomState(10 * k + a)
+    dg = RoundDigest(
+        round_idx=3, seeds=rng.randint(0, 2**31, a).astype(np.uint32),
+        rs=rng.randn(a, k).astype(np.float32),
+        coeffs=rng.rand(a).astype(np.float32))
+    codec = DigestCodec(num_blocks=k)
+    buf = codec.encode(dg)
+    assert len(buf) * 8 == digest_downlink_bits(a, k)
+    out = codec.decode(buf)
+    assert out.round_idx == 3 and out.num_uploads == a
+    assert not out.uniform_mean
+    np.testing.assert_array_equal(out.seeds, dg.seeds)
+    np.testing.assert_array_equal(out.coeffs, dg.coeffs)
+    np.testing.assert_array_equal(out.rs, np.asarray(dg.rs).reshape(a, k))
+    # decode∘encode is idempotent at the byte level
+    assert codec.encode(out) == buf
+
+
+def test_digest_codec_uniform_mean_skips_coeff_column():
+    rng = np.random.RandomState(0)
+    a, k = 5, 2
+    dg = RoundDigest(round_idx=0,
+                     seeds=rng.randint(0, 2**31, a).astype(np.uint32),
+                     rs=rng.randn(a, k).astype(np.float32), coeffs=None)
+    codec = DigestCodec(num_blocks=k)
+    buf = codec.encode(dg)
+    assert len(buf) * 8 == digest_downlink_bits(a, k, include_coeffs=False)
+    assert len(buf) * 8 < digest_downlink_bits(a, k)
+    out = codec.decode(buf)
+    assert out.uniform_mean and out.coeffs is None
+    np.testing.assert_array_equal(out.rs, dg.rs)
+
+
+def test_digest_codec_rejects_mismatched_k():
+    dg = RoundDigest(0, np.zeros(2, np.uint32),
+                     np.zeros((2, 3), np.float32), np.zeros(2, np.float32))
+    with pytest.raises(ValueError, match="k="):
+        DigestCodec(num_blocks=1).encode(dg)
+
+
+# ---------------------------------------------------------------------------
+# round log: bounded window, contiguity, eviction
+# ---------------------------------------------------------------------------
+
+def _digest(k, n=2, seed=0):
+    rng = np.random.RandomState(seed + k)
+    return RoundDigest(k, rng.randint(0, 2**31, n).astype(np.uint32),
+                       rng.randn(n, 1).astype(np.float32),
+                       rng.rand(n).astype(np.float32))
+
+
+def test_round_log_window_and_eviction():
+    log = RoundLog(DigestCodec(1), window=3)
+    bits = [log.append(_digest(k)) for k in range(5)]
+    assert log.next_round == 5
+    # inside the window: the exact encoded bits
+    assert log.suffix_bits(2) == sum(bits[2:])
+    assert log.suffix_bits(4) == bits[4]
+    assert log.suffix_bits(5) == 0                 # already current
+    # beyond the window: evicted
+    assert log.suffix_bits(1) is None and log.replay(1) is None
+    frames = log.replay(2)
+    assert [f.round_idx for f in frames] == [2, 3, 4]
+
+
+def test_round_log_enforces_contiguity():
+    log = RoundLog(DigestCodec(1), window=4)
+    log.append(_digest(0))
+    with pytest.raises(ValueError, match="expects round 1"):
+        log.append(_digest(2))
+
+
+# ---------------------------------------------------------------------------
+# the core invariant: digest replay ≡ dense broadcast, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_event_driven_digest_trajectory_and_replay_bitidentical(digits8):
+    """Engine digest ≡ dense trajectories; shadow replay verified in-run.
+
+    ``verify_replay=True`` makes the engine assert per-round that an
+    independent StatefulClient replaying the digest reaches the same
+    parameters bit-for-bit — the DESIGN §9 invariant as a live check.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    base = dict(rounds=6, population=48, participation=0.25,
+                eval_every=10**6, seed=3)
+    hd = run_federation(RuntimeConfig(**base), p0, clients, xte, yte)
+    hg = run_federation(
+        RuntimeConfig(**base, downlink_mode="digest", downlink_log_window=8,
+                      verify_replay=True),
+        p0, clients, xte, yte)
+    _assert_tree_equal(hd["final_params"], hg["final_params"])
+    assert hg["downlink_mode"] == "digest"
+    # the digest downlink moved far fewer bits than the dense broadcast
+    assert hg["cum_downlink_bits"][-1] < hd["cum_downlink_bits"][-1]
+
+
+def test_missed_round_catchup_replay_bitidentical(digits8):
+    """A client that missed every round catches up via the log suffix.
+
+    The client holds x₀, the server is 6 rounds ahead; replaying the
+    log suffix through the shared apply path must land on the server's
+    parameters exactly — the partial-participation scenario made
+    coherent end-to-end.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    cfg = RuntimeConfig(rounds=6, population=48, participation=0.25,
+                        eval_every=10**6, downlink_mode="digest",
+                        downlink_log_window=8)
+    h = run_federation(cfg, p0, clients, xte, yte)
+    client = StatefulClient(p0, cfg.build_protocol(p0))
+    info = client.catch_up(h["round_log"])
+    assert info["mode"] == "digest" and info["rounds_replayed"] == 6
+    assert info["suffix_bits"] == h["downlink_stats"]["broadcast_bits"]
+    _assert_tree_equal(h["final_params"], client.params)
+
+
+def test_catchup_gap_beyond_window_falls_back_to_dense(digits8):
+    """Past the log window the suffix is gone: one dense resync.
+
+    Client-side: ``catch_up`` refuses without ``server_params`` and
+    syncs with them.  Server-side: the engine accounts the fallback
+    (``dense_resyncs`` > 0) for never-sampled clients once the run is
+    longer than the window.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    cfg = RuntimeConfig(rounds=8, population=120, participation=0.1,
+                        eval_every=10**6, downlink_mode="digest",
+                        downlink_log_window=3)
+    h = run_federation(cfg, p0, clients, xte, yte)
+    assert h["dense_resyncs"].sum() > 0
+    client = StatefulClient(p0, cfg.build_protocol(p0))
+    with pytest.raises(ValueError, match="dense resync"):
+        client.catch_up(h["round_log"])
+    info = client.catch_up(h["round_log"], server_params=h["final_params"])
+    assert info["mode"] == "dense"
+    _assert_tree_equal(h["final_params"], client.params)
+    assert client.next_round == 8
+
+
+def test_fused_path_digest_trajectory_and_replay_bitidentical(digits8):
+    """Full participation → fused scan; digest mode must not move a bit.
+
+    The fused path captures each round's (r, ξ) from the scan, logs
+    uniform-mean digests, and ``verify_replay`` replays the whole log
+    from x₀ against the scan's final parameters — asserted inside
+    ``run_federation`` and re-checked here via a fresh client.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    base = dict(rounds=5, population=8, participation=1.0)
+    hd = run_federation(RuntimeConfig(**base), p0, clients, xte, yte)
+    hg = run_federation(
+        RuntimeConfig(**base, downlink_mode="digest", verify_replay=True),
+        p0, clients, xte, yte)
+    assert hd["fused_path"] and hg["fused_path"]
+    np.testing.assert_array_equal(hd["loss"], hg["loss"])
+    _assert_tree_equal(hd["final_params"], hg["final_params"])
+    client = StatefulClient(p0, RuntimeConfig(**base).build_protocol(p0))
+    client.catch_up(hg["round_log"])
+    _assert_tree_equal(hg["final_params"], client.params)
+    # uniform-mean digests: dimension-free downlink accounting
+    n = 8
+    assert hg["cum_downlink_bits"][-1] == 5 * digest_downlink_bits(
+        n, 1, include_coeffs=False)
+
+
+def test_digest_replay_bitidentical_across_mesh_sharded_apply(digits8):
+    """An unsharded client replays a mesh-sharded server bit-for-bit.
+
+    The server applies each round on a (2, 4) mesh; the shadow client
+    (``verify_replay``) and the post-hoc catch-up replay use the
+    single-device fori path.  DESIGN §7 pins the two applies bitwise
+    shard-invariant, so the digest replay must land exactly — the
+    downlink story composes with the sharded server.
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    cfg = RuntimeConfig(rounds=3, population=16, participation=0.5,
+                        eval_every=10**6, mesh_shape=(2, 4),
+                        downlink_mode="digest", downlink_log_window=4,
+                        verify_replay=True, seed=1)
+    h = run_federation(cfg, p0, clients, xte, yte)
+    assert h["sharding"]["devices"] == 8
+    client = StatefulClient(p0, cfg.build_protocol(p0))
+    client.catch_up(h["round_log"])
+    _assert_tree_equal(h["final_params"], client.params)
+
+
+def test_digest_replay_spans_async_staleness_rounds(digits8):
+    """Stale-upload rounds defer frames across digests; replay still exact."""
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    cfg = RuntimeConfig(
+        rounds=6, population=60, participation=0.2, eval_every=10**6,
+        downlink_mode="digest", downlink_log_window=8, verify_replay=True,
+        server=ServerConfig(max_staleness=2, staleness_exponent=1.0,
+                            round_period_s=0.003),
+        channel=ChannelConfig(drop_prob=0.1))
+    h = run_federation(cfg, p0, clients, xte, yte)   # verify_replay asserts
+    client = StatefulClient(p0, cfg.build_protocol(p0))
+    client.catch_up(h["round_log"])
+    _assert_tree_equal(h["final_params"], client.params)
+
+
+# ---------------------------------------------------------------------------
+# refusals and config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", ["fedavg", "qsgd"])
+def test_dense_protocols_refuse_digest_downlink(proto, digits8):
+    clients, xte, yte = digits8
+    with pytest.raises(ValueError, match="digest downlink"):
+        run_federation(
+            RuntimeConfig(rounds=1, population=8, participation=1.0,
+                          protocol_name=proto, downlink_mode="digest"),
+            init_mlp(), clients, xte, yte)
+
+
+def test_unknown_downlink_mode_rejected(digits8):
+    clients, xte, yte = digits8
+    with pytest.raises(ValueError, match="downlink_mode"):
+        run_federation(
+            RuntimeConfig(rounds=1, population=8, downlink_mode="multicast"),
+            init_mlp(), clients, xte, yte)
+
+
+def test_stateful_client_refuses_dense_protocols():
+    from repro.fed.protocols import make_protocol
+    p0 = init_mlp()
+    with pytest.raises(ValueError, match="digest"):
+        StatefulClient(p0, make_protocol("fedavg", p0))
+
+
+# ---------------------------------------------------------------------------
+# accounting property: reported bits ≡ codec-recomputed bits, all protocols × widths
+# ---------------------------------------------------------------------------
+
+_BITS_CASES = [
+    # (protocol, downlink, k, scalar_format)
+    ("fedscalar", "dense", 1, "fp32"),
+    ("fedscalar", "dense", 4, "fp16"),
+    ("fedscalar", "digest", 1, "fp32"),
+    ("fedscalar", "digest", 4, "fp16"),
+    ("fedavg", "dense", 1, "fp32"),
+    ("fedavg", "dense", 1, "fp16"),
+    ("qsgd", "dense", 1, "fp32"),
+]
+
+
+@pytest.mark.parametrize("proto,dmode,k,scalar", _BITS_CASES)
+def test_per_round_bits_match_codec_recompute(proto, dmode, k, scalar, digits8):
+    """hist uplink+downlink ≡ C·bits_per_upload + downlink_bits per round.
+
+    The property the accounting plumbing must keep: nothing in the
+    engine invents or drops bits relative to the codec single sources
+    (``upload_bits``/``dense_upload_bits``/``quantized_upload_bits`` on
+    the uplink, ``dense_downlink_bits``/``digest_downlink_bits`` on the
+    downlink, catch-up included).
+    """
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    cfg = RuntimeConfig(
+        rounds=4, population=32, participation=0.25, eval_every=10**6,
+        protocol_name=proto, num_projections=k,
+        projection_mode="block" if k > 1 else "full",
+        scalar_format=scalar, downlink_mode=dmode, downlink_log_window=8,
+        channel=ChannelConfig(drop_prob=0.15), seed=11)
+    h = run_federation(cfg, p0, clients, xte, yte)
+    codec = cfg.build_protocol(p0).wire_codec
+    assert h["bits_per_client_per_round"] == codec.bits_per_upload
+
+    d = sum(l.size for l in _leaves(p0))
+    up_per_round = np.diff(np.concatenate([[0.0], h["cum_bits"]]))
+    dl_per_round = np.diff(np.concatenate([[0.0], h["cum_downlink_bits"]]))
+    for r in range(4):
+        assert up_per_round[r] == h["cohort_size"][r] * codec.bits_per_upload
+        if dmode == "dense":
+            assert dl_per_round[r] == dense_downlink_bits(d, 32)
+        else:
+            expect = (h["catchup_bits"][r]
+                      + digest_downlink_bits(int(h["applied"][r]), k))
+            assert dl_per_round[r] == expect
+    # and the channel's own counter reconciles with the history total
+    assert h["total_downlink_bits"] == int(h["cum_downlink_bits"][-1])
+
+
+def test_downlink_is_priced_into_wall_and_energy(digits8):
+    """The dense broadcast now costs wall-clock and energy (12′)/(13′)."""
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    d = sum(l.size for l in _leaves(p0))
+    ch = ChannelConfig(downlink_bandwidth_bps=1e6, p_down_watts=5.0)
+    h = run_federation(
+        RuntimeConfig(rounds=3, population=24, participation=0.25,
+                      eval_every=10**6, channel=ch),
+        p0, clients, xte, yte)
+    per_round_wall = dense_downlink_bits(d, 32) / 1e6
+    np.testing.assert_allclose(
+        h["cum_downlink_wall_s"], per_round_wall * np.arange(1, 4))
+    np.testing.assert_allclose(
+        h["cum_downlink_energy_j"], 5.0 * per_round_wall * np.arange(1, 4))

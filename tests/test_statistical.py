@@ -8,7 +8,12 @@ contracts (PR 3 tiering: large-sample checks ride the ``slow`` tier):
   E‖Q(x) − x‖² ≤ min(d/s², √d/s)·‖x‖² per quantized tensor,
 * every frame codec (scalar / dense / quantized) is an exact
   byte-level round trip across scalar widths and awkward payload
-  dimensions.
+  dimensions — and the vectorized batch path is byte-identical to the
+  per-frame path,
+* :meth:`CostModel.cohort_round_cost` deadline semantics: under TDMA
+  the deadline bounds the **cumulative** elapsed slot time (not each
+  slot individually), and energy never bills on-air time past the
+  deadline cut (regression pins for two accounting bugs).
 """
 import jax
 import jax.numpy as jnp
@@ -17,6 +22,8 @@ import pytest
 
 from repro.core import qsgd as q
 from repro.fed.costmodel import (
+    ChannelConfig,
+    CostModel,
     dense_upload_bits,
     quantized_upload_bits,
     upload_bits,
@@ -181,10 +188,54 @@ def test_codec_bits_accounting_at_paper_point():
     assert codec.bytes_per_upload * 8 == codec.bits_per_upload
 
 
+def _codec_cases(c: int, rng):
+    """(codec, payloads (C, P) f32) for all three frame types."""
+    return [
+        (WireFormat(num_projections=3, scalar="fp16"),
+         rng.randn(c, 3).astype(np.float32)),
+        (DenseFrameCodec(37, scalar="bf16"),
+         rng.randn(c, 37).astype(np.float32)),
+        (QuantizedFrameCodec(29, num_norms=2, bits=8),
+         np.concatenate(
+             [rng.randint(-127, 128, size=(c, 29)).astype(np.float32),
+              np.abs(rng.randn(c, 2)).astype(np.float32) + 0.1], axis=1)),
+    ]
+
+
+def test_batch_encode_decode_byte_identical_to_per_frame():
+    """Vectorized batch path ≡ per-frame path, byte-for-byte, all codecs.
+
+    ``UplinkChannel.transmit`` runs the batch path (no O(C) interpreter
+    round-trips at 100k-client scale); this is the contract that keeps
+    it honest against the reference per-frame serializers.
+    """
+    rng = np.random.RandomState(7)
+    c = 19
+    seeds = rng.randint(0, 2**31, size=c).astype(np.uint32)
+    for codec, payloads in _codec_cases(c, rng):
+        blob = codec.encode_batch(payloads, seeds)
+        per_frame = b"".join(codec.encode(payloads[i], int(seeds[i]))
+                             for i in range(c))
+        assert blob == per_frame, type(codec).__name__
+        r_b, s_b = codec.decode_batch(blob, c)
+        for i in range(c):
+            r_i, s_i = codec.decode(
+                blob[i * codec.bytes_per_upload:(i + 1) * codec.bytes_per_upload])
+            np.testing.assert_array_equal(r_b[i], r_i)
+            assert int(s_b[i]) == s_i
+
+
+def test_batch_decode_rejects_wrong_length():
+    codec = WireFormat(num_projections=2)
+    blob = codec.encode_batch(np.zeros((3, 2), np.float32),
+                              np.zeros(3, np.uint32))
+    with pytest.raises(ValueError, match="batch"):
+        codec.decode_batch(blob, 4)
+
+
 @pytest.mark.slow
 def test_uplink_channel_transmits_all_frame_types():
     """A cohort of each frame type survives the byte-level channel path."""
-    from repro.fed.costmodel import ChannelConfig, CostModel
     from repro.fed.runtime import UplinkChannel
 
     rng = np.random.RandomState(3)
@@ -207,3 +258,86 @@ def test_uplink_channel_transmits_all_frame_types():
         np.testing.assert_array_equal(tx.r_hat, payloads)
         assert tx.payload_bytes == c * codec.bytes_per_upload
         assert np.all(tx.latency_s > 0)
+
+
+# ---------------------------------------------------------------------------
+# CostModel.cohort_round_cost deadline semantics (regression pins)
+# ---------------------------------------------------------------------------
+
+def _cm(access: str, base_latency_s: float = 0.0) -> CostModel:
+    return CostModel(ChannelConfig(access=access, p_tx_watts=2.0,
+                                   base_latency_s=base_latency_s),
+                     fedavg_bits_per_client=32_000)
+
+
+def test_tdma_deadline_bounds_cumulative_elapsed_time():
+    """Regression: the deadline cuts the round, not each slot.
+
+    Three 0.4 s slots against a 1.0 s deadline: the round ends at
+    1.0 s.  The old code clipped per slot (each 0.4 < 1.0 → no clip)
+    and billed 1.2 s of wall — 20% past the deadline.
+    """
+    cm = _cm("tdma")
+    _, wall, _ = cm.cohort_round_cost(np.array([0.4, 0.4, 0.4]), 100,
+                                      deadline_s=1.0)
+    assert wall == pytest.approx(cm.t_other + 1.0)
+
+
+def test_tdma_wall_never_exceeds_deadline():
+    """Even slots individually under the deadline cannot sum past it."""
+    cm = _cm("tdma")
+    for slots in ([2.0, 2.0], [0.9, 0.9, 0.9, 0.9], [5.0]):
+        _, wall, _ = cm.cohort_round_cost(np.asarray(slots), 64,
+                                          deadline_s=3.0)
+        assert wall <= cm.t_other + 3.0 + 1e-12, slots
+
+
+def test_energy_clipped_at_deadline_concurrent():
+    """Regression: a cut-off upload stops radiating at the deadline.
+
+    Concurrent 5.0 s and 0.5 s uploads, 1.0 s deadline: on-air time is
+    1.0 + 0.5 s.  The old code billed the full 5.5 s — 2 W × 4 J of
+    energy that was never transmitted.
+    """
+    cm = _cm("concurrent")
+    _, _, energy = cm.cohort_round_cost(np.array([5.0, 0.5]), 100,
+                                        deadline_s=1.0)
+    assert energy == pytest.approx(2.0 * (1.0 + 0.5))
+
+
+def test_energy_clipped_at_deadline_tdma():
+    """TDMA: slot 2 starts at t=2, is cut at the 3 s deadline → 1 s air."""
+    cm = _cm("tdma")
+    _, wall, energy = cm.cohort_round_cost(np.array([2.0, 2.0]), 100,
+                                           deadline_s=3.0)
+    assert wall == pytest.approx(cm.t_other + 3.0)
+    assert energy == pytest.approx(2.0 * (2.0 + 1.0))
+
+
+def test_tdma_slot_fully_past_deadline_burns_nothing():
+    """A slot scheduled to start after the cut never gets on air."""
+    cm = _cm("tdma")
+    _, wall, energy = cm.cohort_round_cost(np.array([2.0, 2.0, 2.0]), 100,
+                                           deadline_s=1.5)
+    assert wall == pytest.approx(cm.t_other + 1.5)
+    assert energy == pytest.approx(2.0 * 1.5)   # only slot 0, truncated
+
+
+def test_base_latency_excluded_from_air_time_under_deadline():
+    """Access latency is not transmission: clipping keeps it excluded."""
+    cm = _cm("concurrent", base_latency_s=0.2)
+    # upload completes at 0.7 s (0.5 s on air); deadline cuts at 0.4 s
+    _, _, energy = cm.cohort_round_cost(np.array([0.7]), 100, deadline_s=0.4)
+    assert energy == pytest.approx(2.0 * 0.2)   # on air from 0.2 to 0.4 s
+
+
+@pytest.mark.parametrize("access", ["concurrent", "tdma"])
+def test_infinite_deadline_preserves_legacy_accounting(access):
+    """deadline=∞ (the fused path / replay_round_costs) is bit-preserved."""
+    cm = _cm(access, base_latency_s=0.1)
+    ups = np.abs(np.random.RandomState(0).randn(6)) + 0.2
+    bits, wall, energy = cm.cohort_round_cost(ups, 100)
+    assert bits == 600
+    expect_wall = np.sum(ups) if access == "tdma" else np.max(ups)
+    assert wall == pytest.approx(cm.t_other + expect_wall)
+    assert energy == pytest.approx(2.0 * np.sum(ups - 0.1))
