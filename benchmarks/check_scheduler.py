@@ -1,0 +1,75 @@
+"""CI gate on the continuous-round scheduler's serving throughput.
+
+Reads ``experiments/scheduler/throughput.csv`` (written by
+``benchmarks.run --only-scheduler``) and fails the build unless
+
+  1. the async pipelined scheduler sustains ≥ ``RATIO_FLOOR`` × the
+     sync scheduler's clients/s on the 10⁵-client population (the
+     PR acceptance figure), and
+  2. async clients/s ≥ ``CLIENTS_PER_S_FLOOR`` absolute.
+
+The clients/s figures come from the **modeled** serving timeline
+(eq. 12″) — deterministic given the seed, independent of runner
+hardware — so the floors are pinned tight.  The absolute floor is
+**ratchet-up only**: when a change legitimately improves throughput,
+raise the floor to just under the new figure in the same PR; never
+lower it to make a regression pass (that is the regression the gate
+exists to catch).
+
+    PYTHONPATH=src python -m benchmarks.check_scheduler
+"""
+from __future__ import annotations
+
+import csv
+import sys
+
+CSV_PATH = "experiments/scheduler/throughput.csv"
+
+# Ratchet-up only (see module docstring).  Current figure: ~258k
+# modeled clients/s async vs ~18k sync (14.3×) at 10⁵ clients.
+CLIENTS_PER_S_FLOOR = 200_000.0
+RATIO_FLOOR = 10.0
+POPULATION_FLOOR = 100_000
+
+
+def main() -> int:
+    try:
+        with open(CSV_PATH) as f:
+            rows = {r["mode"]: r for r in csv.DictReader(f)}
+    except FileNotFoundError:
+        print(f"scheduler gate FAILED: {CSV_PATH} missing — run "
+              "`PYTHONPATH=src python -m benchmarks.run --only-scheduler`",
+              file=sys.stderr)
+        return 1
+
+    failures = []
+    for mode in ("sync", "async_pipelined"):
+        if mode not in rows:
+            failures.append(f"CSV has no '{mode}' row")
+    if not failures:
+        sync = float(rows["sync"]["clients_per_s"])
+        asy = float(rows["async_pipelined"]["clients_per_s"])
+        pop = int(rows["async_pipelined"]["population"])
+        ratio = asy / sync if sync > 0 else float("inf")
+        if pop < POPULATION_FLOOR:
+            failures.append(f"population {pop} < {POPULATION_FLOOR} — the "
+                            "acceptance figure is defined at 10⁵ clients")
+        if ratio < RATIO_FLOOR:
+            failures.append(f"async/sync clients_per_s ratio {ratio:.2f} "
+                            f"< {RATIO_FLOOR}")
+        if asy < CLIENTS_PER_S_FLOOR:
+            failures.append(f"async clients_per_s {asy:.0f} < pinned floor "
+                            f"{CLIENTS_PER_S_FLOOR:.0f} (ratchet-up only)")
+        if not failures:
+            print(f"scheduler gate OK: async {asy:.0f} clients/s = "
+                  f"{ratio:.1f}× sync ({sync:.0f}) at {pop} clients "
+                  f"(floors: {CLIENTS_PER_S_FLOOR:.0f} abs, "
+                  f"{RATIO_FLOOR}× ratio)")
+            return 0
+    for msg in failures:
+        print(f"scheduler gate FAILED: {msg}", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

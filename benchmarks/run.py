@@ -25,6 +25,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         CPU — structural check, not TPU timing)
   sharded_recon_*     — mesh-sharded server reconstruction throughput vs
                         device count (DESIGN §7; derived = elements/s)
+  scheduler_*         — continuous-round serving throughput on a
+                        10⁵-client population: legacy vs sync vs async
+                        pipelined scheduler (DESIGN §10; derived =
+                        modeled clients/s; CSV →
+                        experiments/scheduler/throughput.csv, gated by
+                        benchmarks.check_scheduler)
   roofline_*          — dry-run sweep summary
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--rounds 300]``
@@ -375,6 +381,82 @@ def bench_sharded_throughput():
 
 
 # ---------------------------------------------------------------------------
+# continuous-round scheduler: serving throughput at 10⁵ clients (DESIGN §10)
+# ---------------------------------------------------------------------------
+
+SCHEDULER_CSV = "experiments/scheduler/throughput.csv"
+
+
+def bench_scheduler_throughput(population: int = 100_000, rounds: int = 20):
+    """Sync vs async pipelined serving over a 10⁵-client population.
+
+    One fedscalar × digest-downlink configuration (cohort 1000 at 1%
+    participation, 0.1 Mbps, 20 ms access latency), driven twice: the
+    sync scheduler (bit-identical to the legacy loop) and the async
+    scheduler with rounds opened every 1 ms up to 32 in flight.  The
+    reported clients/s is the **modeled serving timeline** (eq. 12″) —
+    deterministic given the seed, so ``benchmarks.check_scheduler``
+    can gate CI on a pinned floor and on async ≥ 10× sync.  Rows land
+    in ``experiments/scheduler/throughput.csv`` for report §Scheduler.
+    """
+    import os
+
+    from repro.data import load_digits, make_client_datasets, train_test_split_arrays
+    from repro.fed.costmodel import ChannelConfig
+    from repro.fed.runtime import RuntimeConfig, SchedulerConfig, run_federation
+    from repro.models.mlp_classifier import init_mlp
+
+    x, y = load_digits()
+    xtr, ytr, xte, yte = train_test_split_arrays(x, y)
+    clients = make_client_datasets(xtr, ytr, 20)
+    p0 = init_mlp()
+
+    base = dict(rounds=rounds, population=population, participation=0.01,
+                seed=0, eval_every=10**6, downlink_mode="digest",
+                channel=ChannelConfig(base_latency_s=0.02,
+                                      lognormal_sigma=0.5))
+    schedulers = dict(
+        sync=SchedulerConfig(mode="sync"),
+        async_pipelined=SchedulerConfig(mode="async", period_s=0.001,
+                                        max_rounds_in_flight=32,
+                                        staleness_window=4),
+    )
+    rows = []
+    for mode, sched in schedulers.items():
+        t0 = time.perf_counter()
+        h = run_federation(RuntimeConfig(scheduler=sched, **base),
+                           p0, clients, xte, yte)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        s = h["scheduler"]
+        emit(f"scheduler_{mode}_n{population}", us,
+             f"{s['clients_per_s']:.0f}_clients/s_"
+             f"{s['rounds_per_s']:.1f}_rounds/s_"
+             f"lag{s['params_lag_max']}")
+        rows.append(dict(
+            mode=mode, protocol="fedscalar", population=population,
+            cohort=int(h["cohort_size"][0]), rounds=rounds,
+            quorum_frac=s["quorum_frac"],
+            period_s=s["period_s"] if s["period_s"] is not None else "",
+            max_rounds_in_flight=s["max_rounds_in_flight"],
+            makespan_s=f"{s['makespan_s']:.6f}",
+            rounds_per_s=f"{s['rounds_per_s']:.3f}",
+            clients_per_s=f"{s['clients_per_s']:.1f}",
+            stale_admitted=s["stale_admitted"],
+            stale_dropped=s["stale_dropped"],
+            params_lag_max=s["params_lag_max"],
+            queue_peak_bytes=s["queue_peak_bytes"],
+            agg_state_bytes_peak=s["agg_state_bytes_peak"],
+            client_state_bytes=s["client_state_bytes"]))
+
+    os.makedirs(os.path.dirname(SCHEDULER_CSV), exist_ok=True)
+    cols = list(rows[0])
+    with open(SCHEDULER_CSV, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+
+
+# ---------------------------------------------------------------------------
 # roofline / dry-run summary
 # ---------------------------------------------------------------------------
 
@@ -400,8 +482,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=300)
     ap.add_argument("--skip-digits", action="store_true")
+    ap.add_argument("--only-scheduler", action="store_true",
+                    help="just regenerate experiments/scheduler/throughput.csv")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.only_scheduler:
+        bench_scheduler_throughput()
+        print(f"# {len(ROWS)} benchmark rows", flush=True)
+        return
     bench_table1()
     if not args.skip_digits:
         bench_digits(args.rounds)
@@ -412,6 +500,7 @@ def main() -> None:
     bench_kernels()
     bench_runtime_throughput()
     bench_sharded_throughput()
+    bench_scheduler_throughput()
     bench_roofline()
     print(f"# {len(ROWS)} benchmark rows", flush=True)
 

@@ -10,10 +10,21 @@ Usage::
 
     PYTHONPATH=src python examples/runtime_scale.py \
         [--population 100000] [--participation 0.01] [--rounds 50] \
+        [--serve sync|async|legacy] [--quorum 1.0] [--period-s 0.001] \
+        [--depth 32] [--window 4] \
         [--sampler uniform|weighted|poisson] [--scalar fp32|fp16|bf16] \
         [--deadline-s inf] [--max-staleness 0] [--staleness-beta 0.0] \
         [--drop-prob 0.0] [--downlink dense|digest] [--log-window 64] \
         [--check-fused]
+
+``--serve`` picks the driver (DESIGN §10): ``sync`` is the
+continuous-round scheduler in its bit-identical-to-legacy mode (with
+``--quorum`` < 1 rounds close at the ⌈q·C⌉-th arrival instead of the
+deadline), ``async`` pipelines up to ``--depth`` rounds opened every
+``--period-s`` seconds with post-close stragglers re-admitted within
+``--window`` rounds, and ``legacy`` keeps the pre-scheduler
+one-cohort-at-a-time loop.  Scheduler runs report modeled serving
+throughput (rounds/s and clients/s).
 
 ``--check-fused`` additionally verifies that a sampled cohort at
 participation = 1.0 with deadline = ∞ reproduces the paper-scale
@@ -34,7 +45,12 @@ import numpy as np
 
 from repro.data import load_digits, make_client_datasets, train_test_split_arrays
 from repro.fed.costmodel import ChannelConfig
-from repro.fed.runtime import RuntimeConfig, ServerConfig, run_federation
+from repro.fed.runtime import (
+    RuntimeConfig,
+    SchedulerConfig,
+    ServerConfig,
+    run_federation,
+)
 from repro.models.mlp_classifier import init_mlp
 
 
@@ -73,6 +89,19 @@ def main():
     ap.add_argument("--staleness-beta", type=float, default=0.0)
     ap.add_argument("--round-period-s", type=float, default=math.inf)
     ap.add_argument("--drop-prob", type=float, default=0.0)
+    ap.add_argument("--serve", default="sync",
+                    choices=["sync", "async", "legacy"],
+                    help="driver: continuous scheduler (sync/async, DESIGN "
+                         "§10) or the pre-scheduler legacy loop")
+    ap.add_argument("--quorum", type=float, default=1.0,
+                    help="close a round once this fraction of the cohort "
+                         "arrived (1.0 = wait for the deadline)")
+    ap.add_argument("--period-s", type=float, default=0.001,
+                    help="async: open a new round every this many seconds")
+    ap.add_argument("--depth", type=int, default=32,
+                    help="async: max rounds in flight")
+    ap.add_argument("--window", type=int, default=4,
+                    help="async: staleness window for re-admitted stragglers")
     ap.add_argument("--downlink", default="dense", choices=["dense", "digest"])
     ap.add_argument("--log-window", type=int, default=64)
     ap.add_argument("--shards", type=int, default=20)
@@ -88,8 +117,18 @@ def main():
     if args.check_fused:
         check_fused_equivalence(clients, xte, yte)
 
+    if args.serve == "legacy":
+        scheduler = None
+    elif args.serve == "sync":
+        scheduler = SchedulerConfig(mode="sync", quorum_frac=args.quorum)
+    else:
+        scheduler = SchedulerConfig(
+            mode="async", quorum_frac=args.quorum, period_s=args.period_s,
+            max_rounds_in_flight=args.depth, staleness_window=args.window)
+
     cfg = RuntimeConfig(
         rounds=args.rounds,
+        scheduler=scheduler,
         population=args.population,
         participation=args.participation,
         sampler=args.sampler,
@@ -113,10 +152,34 @@ def main():
     h = run_federation(cfg, init_mlp(seed=args.seed), clients, xte, yte)
 
     evals = ~np.isnan(h["loss"])
+    path = ("fused scan" if h["fused_path"]
+            else f"scheduler/{args.serve}" if args.serve != "legacy"
+            else "event-driven legacy")
     print(f"\nran {args.rounds} rounds in {h['sim_compute_seconds']:.1f}s "
-          f"({'fused scan' if h['fused_path'] else 'event-driven'} path)")
+          f"({path} path)")
     print(f"loss  {h['loss'][evals][0]:.4f} → {h['loss'][evals][-1]:.4f}   "
           f"accuracy {h['accuracy'][evals][0]:.4f} → {h['accuracy'][evals][-1]:.4f}")
+
+    if "scheduler" in h:
+        s = h["scheduler"]
+        print("\n== continuous-round serving (modeled timeline, DESIGN §10) ==")
+        print(f"  makespan           : {s['makespan_s']:.3f} s "
+              f"({s['mode']}, quorum {s['quorum_frac']}, "
+              f"{s['max_rounds_in_flight']} round(s) in flight)")
+        print(f"  serving throughput : {s['rounds_per_s']:.1f} rounds/s, "
+              f"{s['clients_per_s']:,.0f} clients/s "
+              f"({s['offered_uploads']} uploads offered)")
+        print(f"  closures           : {s['closed_by_quorum']} by quorum, "
+              f"{len(s['starts']) - s['closed_by_quorum']} by deadline/drain; "
+              f"params lag ≤ {s['params_lag_max']}")
+        print(f"  stragglers         : {s['stale_admitted']} re-admitted ≤ "
+              f"{s['staleness_window']} rounds late, "
+              f"{s['stale_dropped']} dropped, {s['queue_leftover']} left "
+              f"queued at shutdown")
+        print(f"  server state       : {s['client_state_bytes']:,} B "
+              f"per-client map + {s['agg_state_bytes_peak']:,} B aggregator "
+              f"peak + {s['queue_peak_bytes']:,} B queue peak "
+              f"({s['queue_entry_bytes']} B/entry)")
 
     print("\n== unbiased-estimate diagnostics ==")
     diag = h["sampling_diagnostic"]

@@ -96,6 +96,20 @@ class UplinkProtocol(abc.ABC):
         """Uplink bits per client per round (costmodel single source)."""
         return self.wire_codec.bits_per_upload
 
+    @property
+    def queue_entry_bytes(self) -> int:
+        """Resident bytes one upload occupies in a scheduler queue.
+
+        The admission controller holds the *decoded frame*, never the
+        model: payload_dim float32 scalars + seed u32 + client id i64 +
+        HT weight f64 + arrival stamp f64.  For ``fedscalar`` that is
+        O(k) ≈ 28 bytes at k=1 — a million queued uploads fit in tens
+        of MB — while the dense baselines pay Θ(d) per entry; the
+        asymmetry is the paper's point carried into serving (DESIGN
+        §10).
+        """
+        return self.payload_dim * 4 + 4 + 8 + 8 + 8
+
     def downlink_bits(self, model_dim: int, float_bits: int = 32) -> int:
         """Per-round downlink payload under the dense discipline — Θ(d).
 

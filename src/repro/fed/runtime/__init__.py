@@ -30,7 +30,12 @@ float pytree and are only touched at the single per-round apply.
   the shared local-SGD building block, lets the configured
   :class:`repro.fed.protocols.UplinkProtocol` encode/apply, and routes
   large fedscalar cohorts through the fused Pallas reconstruction
-  kernel.
+  kernel,
+* :mod:`scheduler` — the continuous-round serving layer over the
+  engine's :class:`~repro.fed.runtime.engine.EngineCore` (DESIGN §10):
+  admission-controlled waiting/running queues, quorum-or-deadline
+  round closure with Horvitz–Thompson reweighting of the realized
+  cohort, and pipelined async rounds with a bounded staleness window.
 
 The protocol registry itself lives one level up in
 :mod:`repro.fed.protocols` (``fedscalar`` / ``fedavg`` / ``qsgd``) —
@@ -38,12 +43,25 @@ The protocol registry itself lives one level up in
 everything else in this package is shared.
 """
 from repro.fed.runtime.engine import (
+    EngineCore,
     RuntimeConfig,
     StatefulClient,
     draw_cohort_batches,
     run_federation,
 )
-from repro.fed.runtime.sampling import ClientPopulation, Cohort, CohortSampler
+from repro.fed.runtime.sampling import (
+    ClientPopulation,
+    Cohort,
+    CohortSampler,
+    realized_cohort_weights,
+)
+from repro.fed.runtime.scheduler import (
+    AdmissionController,
+    CohortBatch,
+    SchedulerConfig,
+    quorum_close_time,
+    run_scheduled,
+)
 from repro.fed.runtime.server import ServerConfig, StreamingAggregator, Upload
 from repro.fed.runtime.transport import (
     WireFormat,
@@ -60,8 +78,11 @@ from repro.fed.runtime.transport import (
 
 __all__ = [
     "RuntimeConfig", "run_federation", "draw_cohort_batches",
-    "StatefulClient",
+    "StatefulClient", "EngineCore",
+    "SchedulerConfig", "run_scheduled", "AdmissionController",
+    "CohortBatch", "quorum_close_time",
     "ClientPopulation", "Cohort", "CohortSampler",
+    "realized_cohort_weights",
     "ServerConfig", "StreamingAggregator", "Upload",
     "WireFormat", "DenseFrameCodec", "QuantizedFrameCodec",
     "UplinkChannel", "DownlinkChannel", "DigestCodec", "RoundDigest",

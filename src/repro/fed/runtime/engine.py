@@ -69,7 +69,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -93,8 +93,11 @@ from repro.fed.runtime.transport import (
     WireFormat,
 )
 
-__all__ = ["RuntimeConfig", "run_federation", "draw_cohort_batches",
-           "StatefulClient"]
+if TYPE_CHECKING:
+    from repro.fed.runtime.scheduler import SchedulerConfig
+
+__all__ = ["RuntimeConfig", "EngineCore", "run_federation",
+           "draw_cohort_batches", "StatefulClient"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +143,11 @@ class RuntimeConfig:
                                         # asserts bit-identity with the server
     server: ServerConfig = dataclasses.field(default_factory=ServerConfig)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    scheduler: "SchedulerConfig | None" = None
+                                        # continuous-round driver (DESIGN §10):
+                                        # sync (bit-identical to the legacy
+                                        # loop) or async pipelined serving;
+                                        # None = the legacy one-cohort loop
 
     def resolved_distribution(self) -> Distribution:
         if self.family is not None:
@@ -353,6 +361,322 @@ class StatefulClient:
                     rounds_replayed=len(frames), suffix_bits=bits)
 
 
+class EngineCore:
+    """One run's compiled stages + channel state, shared by both drivers.
+
+    Everything the legacy synchronous loop (:func:`_run_legacy`) and
+    the continuous-round scheduler (:mod:`repro.fed.runtime.scheduler`,
+    DESIGN §10) have in common lives here: the stacked client shards,
+    cohort sampler, cost model, uplink/downlink channels, streaming
+    aggregator, the jitted compute/apply/eval stages and the
+    per-client downlink state.  The drivers decide *when* rounds open,
+    close and overlap; the core owns *how* a cohort's payloads are
+    computed, how frames hit the wire, and how a closed round folds
+    into the model — so the two drivers cannot drift in arithmetic.
+    Construction draws nothing from the cost model's RNG (the first
+    draw still happens at the first ``transmit``), which keeps the
+    legacy loop's draw sequence bit-for-bit what it was before this
+    class existed.
+
+    Per-client server state is O(1) by construction: ``client_last``
+    is one int32 round index per registered client (4 MB at 10⁶
+    clients) and the channel/aggregator counters are scalars — the
+    server never holds a per-client model copy
+    (``tests/test_scheduler.py`` audits the bound).
+    """
+
+    def __init__(self, cfg: RuntimeConfig, init_params: Any, client_sets,
+                 x_test, y_test, grad_fn: Callable, eval_fns, client_weights,
+                 proto, d: int):
+        from repro.fed.simulation import _stack_clients
+
+        loss_fn, acc_fn = eval_fns
+        self.cfg = cfg
+        self.proto = proto
+        self.codec = proto.wire_codec
+        self.d = d
+        num_shards = len(client_sets)
+        self.num_shards = num_shards
+        cx, cy = _stack_clients(client_sets)      # (#shards, n_per, feat...)
+        xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+
+        if client_weights is None and cfg.sampler == "weighted":
+            # default PPS weights: the shard size behind each virtual client
+            shard_sizes = np.asarray([len(y) for _, y in client_sets],
+                                     np.float64)
+            client_weights = shard_sizes[np.arange(cfg.population) % num_shards]
+        population = ClientPopulation(cfg.population, weights=client_weights)
+        self.sampler = CohortSampler(population, cfg.participation,
+                                     cfg.sampler, seed=cfg.seed)
+        self.cm = CostModel(
+            cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
+            rng_seed=cfg.seed)
+        self.uplink = UplinkChannel(self.cm, self.codec)
+        self.digest_mode = cfg.downlink_mode == "digest"
+        self.downlink = DownlinkChannel(
+            self.cm, d, cfg.channel.float_bits, mode=cfg.downlink_mode,
+            digest_codec=proto.digest_codec() if self.digest_mode else None,
+            log_window=cfg.downlink_log_window)
+        # Digest downlink makes clients stateful: each holds the round it
+        # last synced to (everyone registers holding x₀), and a sampled
+        # client first replays the log suffix — or takes a dense fallback
+        # resync past the window — before computing on x_k (DESIGN §9).
+        # One int32 round index is the *whole* per-client server state.
+        self.client_last = (np.zeros(cfg.population, np.int32)
+                            if self.digest_mode else None)
+        self.shadow = (StatefulClient(init_params, proto)
+                       if cfg.verify_replay else None)
+        self.agg = StreamingAggregator(cfg.server)
+
+        local = fs.make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
+
+        # ---- jitted fixed-shape chunk: C_chunk clients' local rounds → frames ----
+        @jax.jit
+        def chunk_payloads(params, round_idx, client_ids):
+            bx, by = draw_cohort_batches(cx, cy, num_shards, cfg.seed,
+                                         round_idx, client_ids,
+                                         cfg.local_steps, cfg.batch_size)
+            seeds = fs.round_seeds_for(round_idx, client_ids)
+            deltas = jax.vmap(local, in_axes=(None, 0))(params, (bx, by))
+            payloads = proto.encode_cohort(deltas, seeds, round_idx,
+                                           client_ids)
+            return payloads, seeds
+
+        self.chunk_payloads = chunk_payloads
+
+        # ---- jitted server applies (bucketed shapes) ----
+        if proto.name == "fedscalar":
+            @jax.jit
+            def apply_fori(params, rs, seeds, weights):
+                return proto.server_apply(params, rs, seeds, weights)
+
+            @jax.jit
+            def apply_kernel(params, rs, seeds, weights):
+                return proto.server_apply(params, rs, seeds, weights,
+                                          use_kernel=True)
+
+            self.apply_fori, self.apply_kernel = apply_fori, apply_kernel
+        else:
+            # Dense protocols: the uniform-mean path is the exact paper
+            # aggregation (→ bit-identity with the core round functions on
+            # full-arrival uniform cohorts); the weighted path carries the
+            # runtime's IPW×staleness coefficients over a padded bucket
+            # (zero-weight rows decode to zero contribution).
+            @jax.jit
+            def apply_mean(params, frames):
+                return proto.server_apply(params, frames, None, None)
+
+            @jax.jit
+            def apply_weighted(params, frames, weights):
+                return proto.server_apply(params, frames, None, weights)
+
+            self.apply_mean, self.apply_weighted = apply_mean, apply_weighted
+
+        kern_thresh = cfg.kernel_cohort_threshold
+        if kern_thresh is None:
+            kern_thresh = 512 if jax.default_backend() == "tpu" else None
+        self.kern_thresh = kern_thresh
+
+        # --- mesh-sharded apply (DESIGN §7): each device rebuilds its d-shard ---
+        self.mesh = None
+        self.shard_info = None
+        if cfg.mesh_shape is not None:
+            from repro.launch.mesh import make_fed_mesh
+            from repro.sharding.fed_rules import num_mesh_shards, plan_tree
+
+            mesh = make_fed_mesh(tuple(cfg.mesh_shape))
+            plan = plan_tree(init_params, num_mesh_shards(mesh))
+            self.mesh = mesh
+            self.shard_info = dict(
+                mesh_shape=tuple(cfg.mesh_shape),
+                devices=num_mesh_shards(mesh),
+                per_device_elements=plan.per_shard_elements(),
+                balance=plan.balance(),
+            )
+
+            # Params stay replicated here (the client chunks and eval read the
+            # full model every round), so each apply shards/unshards the views;
+            # a decode-only server holding x resident uses
+            # fed_rules.sharded_apply_blocks and skips that round-trip.
+            @jax.jit
+            def apply_mesh(params, rs, seeds, weights):
+                return proto.server_apply(params, rs, seeds, weights,
+                                          mesh=mesh)
+
+            self.apply_mesh = apply_mesh
+
+        @jax.jit
+        def evaluate(params):
+            return loss_fn(params, (xt, yt)), acc_fn(params, xt, yt)
+
+        self.evaluate = evaluate
+
+    # ---- driver stages ----
+
+    def compute_cohort(self, params, k: int, ids: np.ndarray):
+        """Cohort local rounds in fixed-shape chunks (pad by repeating id 0)
+        → (float32 (C, payload_dim) payloads, uint32 (C,) seeds)."""
+        c = len(ids)
+        rs_np = np.zeros((max(c, 1), self.proto.payload_dim), np.float32)
+        seeds_np = np.zeros(max(c, 1), np.uint32)
+        chunk = self.cfg.client_chunk
+        for lo in range(0, c, chunk):
+            part = ids[lo:lo + chunk]
+            padded = np.zeros(chunk, np.int64) if len(part) < chunk else part
+            if len(part) < chunk:
+                padded[:len(part)] = part
+            rs_c, seeds_c = self.chunk_payloads(params, jnp.uint32(k),
+                                                jnp.asarray(padded, jnp.uint32))
+            rs_np[lo:lo + len(part)] = np.asarray(rs_c)[:len(part)]
+            seeds_np[lo:lo + len(part)] = np.asarray(seeds_c)[:len(part)]
+        return rs_np, seeds_np
+
+    def offer_uploads(self, ids, weights, k: int, tx,
+                      deadline_s: float | None = None) -> None:
+        """Offer one round's transmitted cohort to the aggregator, in
+        client-id order (the deterministic aggregation order).
+        ``deadline_s=None`` keeps the config deadline (legacy loop);
+        the scheduler passes its per-round effective close instead."""
+        for i in range(len(ids)):
+            self.agg.offer(Upload(
+                client_id=int(ids[i]), encoded_round=k,
+                seed=int(tx.seeds[i]), r=tx.r_hat[i],
+                agg_weight=float(weights[i]),
+                latency_s=float(tx.latency_s[i]), lost=bool(tx.lost[i])),
+                deadline_s=deadline_s)
+
+    def apply_round(self, params, aseeds, acoeffs, ars, cohort_size: int, st):
+        """Fold a closed round's buffers into the model.
+
+        → ``(params, use_kernel, apply_s)``; the apply choice (kernel /
+        fori / mesh / exact-mean) is made here once for both drivers.
+        """
+        a = len(aseeds)
+        use_kernel = False
+        apply_s = 0.0
+        if a and not st.skipped:
+            t_apply = time.time()
+            if self.proto.name == "fedscalar":
+                rs_b, w_b, seeds_b = _pad_bucket(ars, acoeffs, aseeds)
+                # mesh apply ≡ fori bitwise (DESIGN §7), so the shadow
+                # replay must NOT take the kernel path on mesh rounds —
+                # the kernel differs by ulps (DESIGN §9).
+                use_kernel = (self.mesh is None
+                              and self.kern_thresh is not None
+                              and a >= self.kern_thresh
+                              and (self.cfg.num_projections == 1
+                                   or self.cfg.projection_mode == "block"))
+                if self.mesh is not None:
+                    applier = self.apply_mesh
+                else:
+                    applier = self.apply_kernel if use_kernel else self.apply_fori
+                params = applier(params, jnp.asarray(rs_b),
+                                 jnp.asarray(seeds_b), jnp.asarray(w_b))
+            else:
+                uniform_exact = (self.cfg.sampler == "uniform"
+                                 and a == cohort_size
+                                 and st.applied_stale == 0
+                                 and bool(np.all(acoeffs == acoeffs[0])))
+                if uniform_exact:
+                    params = self.apply_mean(params, jnp.asarray(ars))
+                else:
+                    rs_b, w_b = _pad_bucket(ars, acoeffs)
+                    params = self.apply_weighted(params, jnp.asarray(rs_b),
+                                                 jnp.asarray(w_b))
+            jax.block_until_ready(jax.tree_util.tree_leaves(params))
+            apply_s = time.time() - t_apply
+        return params, use_kernel, apply_s
+
+    def close_digest(self, k: int, aseeds, acoeffs, ars, st, ids, params,
+                     use_kernel: bool) -> int:
+        """Digest-mode round close: broadcast the round's digest, mark
+        the cohort synced, shadow-verify the replay → broadcast bits."""
+        applied_round = bool(len(aseeds)) and not st.skipped
+        dg = RoundDigest(
+            round_idx=k,
+            seeds=aseeds if applied_round else np.zeros(0, np.uint32),
+            rs=(ars if applied_round
+                else np.zeros((0, self.proto.payload_dim), np.float32)),
+            coeffs=(acoeffs.astype(np.float32) if applied_round
+                    else np.zeros(0, np.float32)))
+        bits = self.downlink.broadcast(dg)
+        self.client_last[ids] = k + 1   # the cohort heard the close broadcast
+        if self.shadow is not None:
+            self.shadow.apply_digest(dg, use_kernel=use_kernel)
+            for x, y in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(self.shadow.params)):
+                if not np.array_equal(np.asarray(x), np.asarray(y)):
+                    raise AssertionError(
+                        f"digest replay diverged from the server at "
+                        f"round {k} (DESIGN §9 invariant)")
+        return bits
+
+    @staticmethod
+    def new_history(K: int) -> dict:
+        hist = {k: np.zeros(K) for k in (
+            "loss", "accuracy", "cum_bits", "cum_downlink_bits", "cum_wall_s",
+            "cum_energy_j", "cum_downlink_wall_s", "cum_downlink_energy_j",
+            "catchup_bits", "dense_resyncs", "cohort_size", "applied",
+            "applied_stale", "lost_channel", "dropped_deadline",
+            "dropped_stale", "weight_sum", "apply_s")}
+        hist["loss"][:] = np.nan
+        hist["accuracy"][:] = np.nan
+        return hist
+
+    def finalize(self, params, hist: dict, t0: float,
+                 extra: dict | None = None) -> dict:
+        """Cumsum the history, reconcile the downlink ledger, and
+        assemble the result dict both drivers return."""
+        cfg = self.cfg
+        K = cfg.rounds
+        for key in ("cum_bits", "cum_downlink_bits", "cum_wall_s",
+                    "cum_energy_j", "cum_downlink_wall_s",
+                    "cum_downlink_energy_j"):
+            hist[key] = np.cumsum(hist[key])
+
+        # Reconcile the channel's own counter against the per-round
+        # history: every downlink bit (broadcasts + catch-up) must be
+        # accounted — the old DownlinkBroadcast stub accumulated a
+        # counter nothing ever read, so bits could silently vanish.
+        if int(hist["cum_downlink_bits"][-1]) != self.downlink.total_bits:
+            raise AssertionError(
+                f"downlink accounting leak: channel counted "
+                f"{self.downlink.total_bits} bits, history recorded "
+                f"{int(hist['cum_downlink_bits'][-1])}")
+
+        applied_rounds = hist["apply_s"] > 0
+        recon_clients_per_s = (
+            float(np.sum(hist["applied"][applied_rounds])
+                  / np.sum(hist["apply_s"][applied_rounds]))
+            if applied_rounds.any() else 0.0)
+
+        out = dict(
+            method=f"runtime_{cfg.sampler}",
+            protocol=self.proto.name,
+            round=np.arange(1, K + 1),
+            final_params=params,
+            bits_per_client_per_round=self.codec.bits_per_upload,
+            sim_compute_seconds=time.time() - t0,
+            fused_path=False,
+            pending_rounds=self.agg.pending_rounds(),
+            sampling_diagnostic=sampling_diagnostic(self.sampler,
+                                                    rounds=min(200, 4 * K)),
+            sharding=self.shard_info,
+            recon_clients_per_s=recon_clients_per_s,
+            downlink_mode=cfg.downlink_mode,
+            total_downlink_bits=self.downlink.total_bits,
+            downlink_stats=dict(
+                broadcast_bits=self.downlink.broadcast_bits,
+                catchup_bits=self.downlink.catchup_bits,
+                dense_resyncs=self.downlink.dense_resyncs),
+            round_log=self.downlink.log,
+            **hist,
+        )
+        if extra:
+            out.update(extra)
+        return out
+
+
 def run_federation(
     cfg: RuntimeConfig,
     init_params: Any,
@@ -371,20 +695,22 @@ def run_federation(
     MLP and exist so tests can drive tiny custom models.
     ``client_weights`` (N,) are the ``weighted`` sampler's relative
     sampling weights; default: each virtual client's shard size.
-    """
-    from repro.fed.simulation import _stack_clients
 
+    With ``cfg.scheduler`` set, the run is driven by the
+    continuous-round scheduler (:mod:`repro.fed.runtime.scheduler`,
+    DESIGN §10) — sync mode is bit-identical to the legacy loop,
+    async mode pipelines rounds — instead of the one-cohort-at-a-time
+    legacy driver (and never takes the fused shortcut).
+    """
     if grad_fn is None:
         from repro.models.mlp_classifier import mlp_grad
         grad_fn = mlp_grad
     if eval_fns is None:
         from repro.models.mlp_classifier import mlp_accuracy, mlp_loss
         eval_fns = (mlp_loss, mlp_accuracy)
-    loss_fn, acc_fn = eval_fns
 
     num_shards = len(client_sets)
     proto = cfg.build_protocol(init_params)
-    codec = proto.wire_codec
     d = tree_size(init_params)
     if proto.name != "fedscalar" and cfg.mesh_shape is not None:
         raise ValueError(
@@ -402,134 +728,52 @@ def run_federation(
     if cfg.verify_replay and cfg.downlink_mode != "digest":
         raise ValueError("verify_replay checks the digest-replay invariant; "
                          "set downlink_mode='digest'")
+    if cfg.scheduler is not None:
+        cfg.scheduler.validate(cfg)
 
-    method = _fused_method(cfg, num_shards)
+    method = None if cfg.scheduler is not None else _fused_method(cfg, num_shards)
     if method is not None:
         return _run_fused(cfg, init_params, client_sets, x_test, y_test,
                           method, proto, d)
 
-    cx, cy = _stack_clients(client_sets)          # (#shards, n_per, feat...)
-    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+    core = EngineCore(cfg, init_params, client_sets, x_test, y_test,
+                      grad_fn, eval_fns, client_weights, proto, d)
+    if cfg.scheduler is not None:
+        from repro.fed.runtime.scheduler import run_scheduled
+        return run_scheduled(core, init_params)
+    return _run_legacy(core, init_params)
 
-    if client_weights is None and cfg.sampler == "weighted":
-        # default PPS weights: the shard size behind each virtual client
-        shard_sizes = np.asarray([len(y) for _, y in client_sets], np.float64)
-        client_weights = shard_sizes[np.arange(cfg.population) % num_shards]
-    population = ClientPopulation(cfg.population, weights=client_weights)
-    sampler = CohortSampler(population, cfg.participation, cfg.sampler,
-                            seed=cfg.seed)
-    cm = CostModel(cfg.channel, fedavg_bits_per_client=d * cfg.channel.float_bits,
-                   rng_seed=cfg.seed)
-    uplink = UplinkChannel(cm, codec)
-    digest_mode = cfg.downlink_mode == "digest"
-    downlink = DownlinkChannel(
-        cm, d, cfg.channel.float_bits, mode=cfg.downlink_mode,
-        digest_codec=proto.digest_codec() if digest_mode else None,
-        log_window=cfg.downlink_log_window)
-    # Digest downlink makes clients stateful: each holds the round it
-    # last synced to (everyone registers holding x₀), and a sampled
-    # client first replays the log suffix — or takes a dense fallback
-    # resync past the window — before computing on x_k (DESIGN §9).
-    client_last = np.zeros(cfg.population, np.int64) if digest_mode else None
-    shadow = StatefulClient(init_params, proto) if cfg.verify_replay else None
-    agg = StreamingAggregator(cfg.server)
 
-    local = fs.make_local_sgd(grad_fn, cfg.local_lr, cfg.local_steps)
+def _run_legacy(core: EngineCore, init_params) -> dict:
+    """The pre-scheduler driver: one synchronous cohort per round.
 
-    # ---- jitted fixed-shape chunk: C_chunk clients' local rounds → frames ----
-    @jax.jit
-    def chunk_payloads(params, round_idx, client_ids):
-        bx, by = draw_cohort_batches(cx, cy, num_shards, cfg.seed, round_idx,
-                                     client_ids, cfg.local_steps,
-                                     cfg.batch_size)
-        seeds = fs.round_seeds_for(round_idx, client_ids)
-        deltas = jax.vmap(local, in_axes=(None, 0))(params, (bx, by))
-        payloads = proto.encode_cohort(deltas, seeds, round_idx, client_ids)
-        return payloads, seeds
-
-    # ---- jitted server applies (bucketed shapes) ----
-    if proto.name == "fedscalar":
-        @jax.jit
-        def apply_fori(params, rs, seeds, weights):
-            return proto.server_apply(params, rs, seeds, weights)
-
-        @jax.jit
-        def apply_kernel(params, rs, seeds, weights):
-            return proto.server_apply(params, rs, seeds, weights,
-                                      use_kernel=True)
-    else:
-        # Dense protocols: the uniform-mean path is the exact paper
-        # aggregation (→ bit-identity with the core round functions on
-        # full-arrival uniform cohorts); the weighted path carries the
-        # runtime's IPW×staleness coefficients over a padded bucket
-        # (zero-weight rows decode to zero contribution).
-        @jax.jit
-        def apply_mean(params, frames):
-            return proto.server_apply(params, frames, None, None)
-
-        @jax.jit
-        def apply_weighted(params, frames, weights):
-            return proto.server_apply(params, frames, None, weights)
-
-    kern_thresh = cfg.kernel_cohort_threshold
-    if kern_thresh is None:
-        kern_thresh = 512 if jax.default_backend() == "tpu" else None
-
-    # --- mesh-sharded apply (DESIGN §7): each device rebuilds its d-shard ---
-    mesh = None
-    shard_info = None
-    if cfg.mesh_shape is not None:
-        from repro.launch.mesh import make_fed_mesh
-        from repro.sharding.fed_rules import num_mesh_shards, plan_tree
-
-        mesh = make_fed_mesh(tuple(cfg.mesh_shape))
-        plan = plan_tree(init_params, num_mesh_shards(mesh))
-        shard_info = dict(
-            mesh_shape=tuple(cfg.mesh_shape),
-            devices=num_mesh_shards(mesh),
-            per_device_elements=plan.per_shard_elements(),
-            balance=plan.balance(),
-        )
-
-        # Params stay replicated here (the client chunks and eval read the
-        # full model every round), so each apply shards/unshards the views;
-        # a decode-only server holding x resident uses
-        # fed_rules.sharded_apply_blocks and skips that round-trip.
-        @jax.jit
-        def apply_mesh(params, rs, seeds, weights):
-            return proto.server_apply(params, rs, seeds, weights, mesh=mesh)
-
-    @jax.jit
-    def evaluate(params):
-        return loss_fn(params, (xt, yt)), acc_fn(params, xt, yt)
-
+    Statement-for-statement the historical loop, now phrased over
+    :class:`EngineCore` stages — same RNG consumption order, same
+    apply choices — so its trajectories and cost figures are
+    bit-identical to every release before the scheduler existed (and
+    the scheduler's sync mode is in turn asserted bit-identical to
+    *this* loop: ``tests/test_scheduler.py``).
+    """
+    cfg = core.cfg
+    agg, cm = core.agg, core.cm
+    uplink, downlink = core.uplink, core.downlink
     params = init_params
     K = cfg.rounds
-    hist = {k: np.zeros(K) for k in (
-        "loss", "accuracy", "cum_bits", "cum_downlink_bits", "cum_wall_s",
-        "cum_energy_j", "cum_downlink_wall_s", "cum_downlink_energy_j",
-        "catchup_bits", "dense_resyncs", "cohort_size", "applied",
-        "applied_stale", "lost_channel", "dropped_deadline", "dropped_stale",
-        "weight_sum", "apply_s")}
-    hist["loss"][:] = np.nan
-    hist["accuracy"][:] = np.nan
+    hist = EngineCore.new_history(K)
     deadline = cfg.server.deadline_s
     t0 = time.time()
 
     for k in range(K):
-        cohort = sampler.sample(k)
+        cohort = core.sampler.sample(k)
         ids = cohort.client_ids
-        if digest_mode:
+        if core.digest_mode:
             # Catch-up before compute: each sampled client syncs from
             # its last round to x_k (log-suffix replay, unicast; dense
-            # fallback past the window).  The round's closing digest
-            # broadcast is added at round close.
-            catchup_bits = 0
-            resyncs = 0
-            for cid in ids:
-                b, kind = downlink.catch_up(int(client_last[cid]), k)
-                catchup_bits += b
-                resyncs += kind == "dense"
+            # fallback past the window), priced in one vectorized batch
+            # (counter-identical to the per-client loop).  The round's
+            # closing digest broadcast is added at round close.
+            catchup_bits, _, resyncs = downlink.catch_up_batch(
+                core.client_last[ids], k)
             downlink_bits = catchup_bits
             hist["catchup_bits"][k] = catchup_bits
             hist["dense_resyncs"][k] = resyncs
@@ -538,81 +782,22 @@ def run_federation(
 
         # --- client compute, fixed-shape chunks (pad by repeating id 0) ---
         c = len(ids)
-        rs_np = np.zeros((max(c, 1), proto.payload_dim), np.float32)
-        seeds_np = np.zeros(max(c, 1), np.uint32)
-        chunk = cfg.client_chunk
-        for lo in range(0, c, chunk):
-            part = ids[lo:lo + chunk]
-            padded = np.zeros(chunk, np.int64) if len(part) < chunk else part
-            if len(part) < chunk:
-                padded[:len(part)] = part
-            rs_c, seeds_c = chunk_payloads(params, jnp.uint32(k),
-                                           jnp.asarray(padded, jnp.uint32))
-            rs_np[lo:lo + len(part)] = np.asarray(rs_c)[:len(part)]
-            seeds_np[lo:lo + len(part)] = np.asarray(seeds_c)[:len(part)]
+        rs_np, seeds_np = core.compute_cohort(params, k, ids)
 
         # --- uplink: bytes on the (lossy, laggy) air ---
         tx = uplink.transmit(rs_np[:c], seeds_np[:c]) if c else None
-        for i in range(c):
-            agg.offer(Upload(
-                client_id=int(ids[i]), encoded_round=k, seed=int(tx.seeds[i]),
-                r=tx.r_hat[i], agg_weight=float(cohort.agg_weights[i]),
-                latency_s=float(tx.latency_s[i]), lost=bool(tx.lost[i])))
+        core.offer_uploads(ids, cohort.agg_weights, k, tx)
 
         # --- round close + model update ---
         aseeds, acoeffs, ars, st = agg.close_round(k)
-        a = len(aseeds)
-        use_kernel = False
-        if a and not st.skipped:
-            t_apply = time.time()
-            if proto.name == "fedscalar":
-                rs_b, w_b, seeds_b = _pad_bucket(ars, acoeffs, aseeds)
-                # mesh apply ≡ fori bitwise (DESIGN §7), so the shadow
-                # replay must NOT take the kernel path on mesh rounds —
-                # the kernel differs by ulps (DESIGN §9).
-                use_kernel = (mesh is None and kern_thresh is not None
-                              and a >= kern_thresh
-                              and (cfg.num_projections == 1
-                                   or cfg.projection_mode == "block"))
-                if mesh is not None:
-                    applier = apply_mesh
-                else:
-                    applier = apply_kernel if use_kernel else apply_fori
-                params = applier(params, jnp.asarray(rs_b),
-                                 jnp.asarray(seeds_b), jnp.asarray(w_b))
-            else:
-                uniform_exact = (cfg.sampler == "uniform" and a == c
-                                 and st.applied_stale == 0
-                                 and bool(np.all(acoeffs == acoeffs[0])))
-                if uniform_exact:
-                    params = apply_mean(params, jnp.asarray(ars))
-                else:
-                    rs_b, w_b = _pad_bucket(ars, acoeffs)
-                    params = apply_weighted(params, jnp.asarray(rs_b),
-                                            jnp.asarray(w_b))
-            jax.block_until_ready(jax.tree_util.tree_leaves(params))
-            hist["apply_s"][k] = time.time() - t_apply
+        params, use_kernel, apply_s = core.apply_round(
+            params, aseeds, acoeffs, ars, c, st)
+        hist["apply_s"][k] = apply_s
 
         # --- digest downlink: close broadcast + stateful client sync ---
-        if digest_mode:
-            applied_round = bool(a) and not st.skipped
-            dg = RoundDigest(
-                round_idx=k,
-                seeds=aseeds if applied_round else np.zeros(0, np.uint32),
-                rs=(ars if applied_round
-                    else np.zeros((0, proto.payload_dim), np.float32)),
-                coeffs=(acoeffs.astype(np.float32) if applied_round
-                        else np.zeros(0, np.float32)))
-            downlink_bits += downlink.broadcast(dg)
-            client_last[ids] = k + 1   # the cohort heard the close broadcast
-            if shadow is not None:
-                shadow.apply_digest(dg, use_kernel=use_kernel)
-                for x, y in zip(jax.tree_util.tree_leaves(params),
-                                jax.tree_util.tree_leaves(shadow.params)):
-                    if not np.array_equal(np.asarray(x), np.asarray(y)):
-                        raise AssertionError(
-                            f"digest replay diverged from the server at "
-                            f"round {k} (DESIGN §9 invariant)")
+        if core.digest_mode:
+            downlink_bits += core.close_digest(k, aseeds, acoeffs, ars, st,
+                                               ids, params, use_kernel)
 
         # --- cost accounting ---
         # Sync mode: the round lasts until the deadline cuts the slowest
@@ -623,7 +808,7 @@ def run_federation(
                       and math.isfinite(cfg.server.round_period_s))
         if c:
             bits, wall, energy = cm.cohort_round_cost(
-                tx.latency_s, codec.bits_per_upload, deadline_s=deadline)
+                tx.latency_s, core.codec.bits_per_upload, deadline_s=deadline)
         else:
             bits, energy, wall = 0.0, 0.0, cm.t_other
         if async_mode:
@@ -646,51 +831,11 @@ def run_federation(
         hist["cum_downlink_wall_s"][k] = dl_wall
         hist["cum_downlink_energy_j"][k] = dl_energy
         if k % cfg.eval_every == 0 or k == K - 1:
-            loss, acc = evaluate(params)
+            loss, acc = core.evaluate(params)
             hist["loss"][k] = float(loss)
             hist["accuracy"][k] = float(acc)
 
-    for key in ("cum_bits", "cum_downlink_bits", "cum_wall_s", "cum_energy_j",
-                "cum_downlink_wall_s", "cum_downlink_energy_j"):
-        hist[key] = np.cumsum(hist[key])
-
-    # Reconcile the channel's own counter against the per-round history:
-    # every downlink bit (broadcasts + catch-up) must be accounted —
-    # the old DownlinkBroadcast stub accumulated a counter nothing ever
-    # read, so bits could silently vanish.
-    if int(hist["cum_downlink_bits"][-1]) != downlink.total_bits:
-        raise AssertionError(
-            f"downlink accounting leak: channel counted "
-            f"{downlink.total_bits} bits, history recorded "
-            f"{int(hist['cum_downlink_bits'][-1])}")
-
-    applied_rounds = hist["apply_s"] > 0
-    recon_clients_per_s = (
-        float(np.sum(hist["applied"][applied_rounds])
-              / np.sum(hist["apply_s"][applied_rounds]))
-        if applied_rounds.any() else 0.0)
-
-    return dict(
-        method=f"runtime_{cfg.sampler}",
-        protocol=proto.name,
-        round=np.arange(1, K + 1),
-        final_params=params,
-        bits_per_client_per_round=codec.bits_per_upload,
-        sim_compute_seconds=time.time() - t0,
-        fused_path=False,
-        pending_rounds=agg.pending_rounds(),
-        sampling_diagnostic=sampling_diagnostic(sampler, rounds=min(200, 4 * K)),
-        sharding=shard_info,
-        recon_clients_per_s=recon_clients_per_s,
-        downlink_mode=cfg.downlink_mode,
-        total_downlink_bits=downlink.total_bits,
-        downlink_stats=dict(
-            broadcast_bits=downlink.broadcast_bits,
-            catchup_bits=downlink.catchup_bits,
-            dense_resyncs=downlink.dense_resyncs),
-        round_log=downlink.log,
-        **hist,
-    )
+    return core.finalize(params, hist, t0)
 
 
 def _run_fused(cfg: RuntimeConfig, init_params, client_sets, x_test, y_test,

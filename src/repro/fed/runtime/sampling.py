@@ -36,6 +36,7 @@ __all__ = [
     "ClientPopulation",
     "Cohort",
     "CohortSampler",
+    "realized_cohort_weights",
     "sampling_diagnostic",
 ]
 
@@ -163,6 +164,38 @@ class CohortSampler:
         weights = 1.0 / (n * pi)
         return Cohort(round_idx=round_idx, client_ids=ids.astype(np.int64),
                       inclusion_probs=pi, agg_weights=weights)
+
+
+def realized_cohort_weights(cohort: Cohort, arrived: np.ndarray) -> np.ndarray:
+    """HT weights of the **realized** cohort under arrival thinning.
+
+    When a round closes by quorum (or deadline) before every sampled
+    member has uploaded, the realized cohort is a thinned subsample:
+    client n participates iff it was sampled (π_n) *and* its upload
+    landed before the close.  Treating the close as an exchangeable
+    thinning of the drawn cohort — arrival order is channel noise,
+    independent of the client's update — the conditional inclusion
+    probability given the draw is A/C (A arrivals of C sampled), so
+    the unbiased weight is
+
+        w̃_n = 1 / (N · π_n · (A/C)) = w_n · C / A,
+
+    the Hájek-style correction: the surviving members absorb the
+    missing mass so E[Σ w̃ · δ̂] still matches the full-participation
+    mean.  ``arrived`` is a (C,) bool mask over ``cohort.client_ids``;
+    returns the (A,) corrected weights aligned with
+    ``cohort.client_ids[arrived]``.  With every member arrived the
+    correction is ×1 and the plain HT weights come back unchanged.
+    """
+    arrived = np.asarray(arrived, bool)
+    if arrived.shape != cohort.client_ids.shape:
+        raise ValueError(
+            f"arrived mask shape {arrived.shape} != cohort {cohort.client_ids.shape}")
+    a = int(arrived.sum())
+    if a == 0:
+        return np.zeros(0, np.float64)
+    scale = cohort.size / a
+    return cohort.agg_weights[arrived] * scale
 
 
 def sampling_diagnostic(sampler: CohortSampler, rounds: int = 200,

@@ -99,8 +99,15 @@ class StreamingAggregator:
     def _stat(self, k: int) -> RoundStats:
         return self._stats.setdefault(k, RoundStats(round_idx=k))
 
-    def offer(self, up: Upload) -> str:
-        """Route one upload → 'applied' | 'deferred' | 'lost' | 'dropped'."""
+    def offer(self, up: Upload, deadline_s: float | None = None) -> str:
+        """Route one upload → 'applied' | 'deferred' | 'lost' | 'dropped'.
+
+        ``deadline_s`` overrides the config deadline for this upload —
+        the continuous scheduler closes rounds at min(quorum time,
+        deadline), so the *effective* cut-off is per-round, not a
+        config constant.  ``None`` (the legacy engine) keeps the config
+        deadline, bit-identically.
+        """
         st = self._stat(up.encoded_round)
         st.offered += 1
         if up.lost:
@@ -108,8 +115,9 @@ class StreamingAggregator:
             return "lost"
         cfg = self.cfg
         if cfg.max_staleness <= 0:
-            # synchronous: miss the deadline → dropped straggler
-            if up.latency_s > cfg.deadline_s:
+            # synchronous: miss the (effective) deadline → dropped straggler
+            cutoff = cfg.deadline_s if deadline_s is None else deadline_s
+            if up.latency_s > cutoff:
                 st.dropped_deadline += 1
                 return "dropped"
             tau = 0
@@ -130,6 +138,55 @@ class StreamingAggregator:
             return "deferred"
         return "applied"
 
+    def offer_routed(self, up: Upload, apply_round: int, tau: int) -> str:
+        """Scheduler-decided routing: apply round and τ come from the caller.
+
+        The continuous scheduler resolves staleness from its modeled
+        timeline (which round was open when the upload landed), not
+        from the ``latency // period`` heuristic :meth:`offer` uses, so
+        it routes explicitly.  All accounting lands on ``apply_round``
+        — the round whose close will report it — never on the encoded
+        round: closed rounds evict their stats at :meth:`close_round`
+        and must not be reopened by a late arrival.
+        """
+        st = self._stat(apply_round)
+        st.offered += 1
+        if up.lost:
+            st.lost_channel += 1
+            return "lost"
+        coeff = up.agg_weight * self.cfg.staleness_weight(tau)
+        self._pending.setdefault(apply_round, []).append(
+            (up.seed, coeff, np.asarray(up.r, np.float32), tau))
+        if tau > 0:
+            st.deferred += 1
+            return "deferred"
+        return "applied"
+
+    def note_dropped(self, round_idx: int, kind: str = "stale") -> str:
+        """Count a scheduler-dropped upload (stale window / deadline miss)
+        against the currently open round ``round_idx``."""
+        st = self._stat(round_idx)
+        st.offered += 1
+        if kind == "stale":
+            st.dropped_stale += 1
+        else:
+            st.dropped_deadline += 1
+        return "dropped"
+
+    def state_bytes(self) -> int:
+        """Approximate resident bytes of pending buffers + open stats.
+
+        O(#pending uploads); the scheduler audits this once per round
+        to pin the O(cohort·k) — never O(d), never O(population) —
+        server-state bound (``tests/test_scheduler.py``).
+        """
+        total = 0
+        for buf in self._pending.values():
+            for _, _, r, _ in buf:
+                total += r.nbytes + 24       # seed u32 + coeff f64 + τ pad
+        total += 96 * len(self._stats)       # RoundStats slots still open
+        return total
+
     def close_round(self, k: int):
         """Freeze round k → (seeds (A,) u32, coeffs (A,), rs (A, payload_dim), stats).
 
@@ -137,10 +194,14 @@ class StreamingAggregator:
         arrivals plus stale arrivals deferred from earlier rounds.
         Arrays come out sorted by (seed) nowhere — they keep arrival
         order, which the engine sorts by client id upstream, so the
-        aggregation order is deterministic.
+        aggregation order is deterministic.  The round's stats record
+        is **evicted** on close (every offer for round k precedes its
+        close in both the legacy loop and the scheduler), so the
+        aggregator's footprint is bounded by the rounds in flight —
+        previously ``_stats`` kept one record per round forever.
         """
         buf = self._pending.pop(k, [])
-        st = self._stat(k)
+        st = self._stats.pop(k, None) or RoundStats(round_idx=k)
         st.applied = len(buf)
         st.weight_sum = float(sum(coeff for _, coeff, _, _ in buf))
         st.applied_stale = sum(1 for _, _, _, tau in buf if tau > 0)
