@@ -23,6 +23,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         derived = measured/predicted variance + bytes)
   kernel_*            — Pallas kernel per-call latency (interpret mode on
                         CPU — structural check, not TPU timing)
+  fused_throughput_*  — fused reconstruct+apply megakernel vs the jitted
+                        fori baseline, clients/s vs cohort, autotuned
+                        block/slab (DESIGN §11; CSV →
+                        experiments/kernels/fused_throughput.csv, gated
+                        by benchmarks.check_kernels)
   sharded_recon_*     — mesh-sharded server reconstruction throughput vs
                         device count (DESIGN §7; derived = elements/s)
   scheduler_*         — continuous-round serving throughput on a
@@ -323,6 +328,69 @@ def bench_runtime_throughput():
 
 
 # ---------------------------------------------------------------------------
+# fused megakernel: reconstruct+apply throughput vs the fori baseline
+# ---------------------------------------------------------------------------
+
+KERNELS_CSV = "experiments/kernels/fused_throughput.csv"
+
+
+def bench_fused_kernel_throughput():
+    """Fused reconstruct+apply vs the jitted fori baseline (DESIGN §11).
+
+    Same 1M-param leaf and weighted-aggregation workload as
+    ``bench_runtime_throughput``, but the contender is the **fused**
+    megakernel serving path (``ops.server_update_fused``) under its
+    autotuned parameters — on CPU the jnp mirror with a tuned
+    ``row_slab``, on TPU the Pallas tile — instead of the
+    interpret-mode Pallas structural check.  Both sides are timed
+    post-compile in the same process, so the fused/fori ratio is a
+    hardware-independent crossover figure; ``benchmarks.check_kernels``
+    gates CI on ratio ≥ 1 at every cohort ≥ 256.  The autotune sweep
+    itself is excluded from the timings (cached winner after the first
+    run — see ``kernels/tune.py``).
+    """
+    import os
+
+    from repro.core import fedscalar as fs
+    from repro.kernels import ops, tune
+
+    params = {"w": jnp.asarray(np.random.RandomState(0).randn(512, 2048),
+                               jnp.float32)}
+    cfg = fs.FedScalarConfig()
+    rows = []
+    for n in (8, 64, 256, 1024):
+        seeds = fs.round_seeds(0, n)
+        rs = jnp.asarray(np.random.RandomState(1).randn(n, 1), jnp.float32)
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+
+        agg = jax.jit(lambda p, r, s, wt: fs.server_aggregate(p, r, s, cfg, wt))
+        us_f, _ = timed(lambda: agg(params, rs, seeds, w)["w"])
+        cps_f = n / (us_f / 1e6)
+        emit(f"fused_throughput_n{n}_fori", us_f, f"{cps_f:.0f}_clients/s")
+
+        best = tune.autotune_fused(512, 2048, n, 1, cfg.distribution.value)
+        fused = jax.jit(lambda p, r, s, wt, b=best: ops.server_update_fused(
+            p, r, s, weights=wt, distribution=cfg.distribution,
+            use_pallas=b["impl"] == "pallas",
+            block=tuple(b["block"]) if b["block"] else None,
+            row_slab=b["row_slab"]))
+        us_u, _ = timed(lambda: fused(params, rs, seeds, w)["w"])
+        cps_u = n / (us_u / 1e6)
+        emit(f"fused_throughput_n{n}_fused", us_u,
+             f"{cps_u:.0f}_clients/s_{best['impl']}_slab{best['row_slab']}")
+        rows.append((n, us_f, cps_f, us_u, cps_u, cps_u / cps_f,
+                     best["impl"], best["row_slab"]))
+
+    os.makedirs(os.path.dirname(KERNELS_CSV), exist_ok=True)
+    with open(KERNELS_CSV, "w") as f:
+        f.write("cohort,fori_us,fori_clients_per_s,fused_us,"
+                "fused_clients_per_s,ratio,impl,row_slab\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]:.1f},{r[2]:.1f},{r[3]:.1f},{r[4]:.1f},"
+                    f"{r[5]:.4f},{r[6]},{r[7]}\n")
+
+
+# ---------------------------------------------------------------------------
 # mesh-sharded server: reconstruction throughput vs device count
 # ---------------------------------------------------------------------------
 
@@ -484,10 +552,17 @@ def main() -> None:
     ap.add_argument("--skip-digits", action="store_true")
     ap.add_argument("--only-scheduler", action="store_true",
                     help="just regenerate experiments/scheduler/throughput.csv")
+    ap.add_argument("--only-kernels", action="store_true",
+                    help="just regenerate experiments/kernels/"
+                         "fused_throughput.csv")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.only_scheduler:
         bench_scheduler_throughput()
+        print(f"# {len(ROWS)} benchmark rows", flush=True)
+        return
+    if args.only_kernels:
+        bench_fused_kernel_throughput()
         print(f"# {len(ROWS)} benchmark rows", flush=True)
         return
     bench_table1()
@@ -499,6 +574,7 @@ def main() -> None:
     bench_direction_sweep()
     bench_kernels()
     bench_runtime_throughput()
+    bench_fused_kernel_throughput()
     bench_sharded_throughput()
     bench_scheduler_throughput()
     bench_roofline()

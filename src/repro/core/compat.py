@@ -13,7 +13,32 @@ import contextlib
 
 import jax
 
-__all__ = ["ambient_mesh_axes", "use_mesh", "make_mesh"]
+__all__ = ["ambient_mesh_axes", "use_mesh", "make_mesh",
+           "ensure_optimization_barrier_batching"]
+
+
+def ensure_optimization_barrier_batching() -> None:
+    """Register the (identity) vmap rule for ``optimization_barrier``.
+
+    jax 0.4.37 lowers ``jax.lax.optimization_barrier`` but never gave
+    its primitive a batching rule, so any ``vmap`` over a function that
+    uses the barrier (the fused megakernel's reduce pins one) dies with
+    ``NotImplementedError``.  The barrier is the identity on each
+    operand, so batching is dim-preserving bind — register exactly
+    that, only if the running jax hasn't already.
+    """
+    try:
+        from jax._src.lax.lax import optimization_barrier_p as prim
+    except ImportError:  # pragma: no cover - future jax moved/fixed it
+        return
+    from jax.interpreters import batching
+    if prim in batching.primitive_batchers:  # newer jax: rule exists
+        return
+
+    def _rule(args, dims, **params):
+        return prim.bind(*args, **params), dims
+
+    batching.primitive_batchers[prim] = _rule
 
 
 def _physical_context_mesh():

@@ -55,10 +55,12 @@ import jax.numpy as jnp
 __all__ = [
     "Distribution",
     "SPARSE_S",
+    "PROJ_SALT",
     "splitmix32",
     "hash_u32",
     "uniform01",
     "parity32",
+    "block_seed",
     "rademacher_flat",
     "gaussian_flat",
     "random_flat",
@@ -83,6 +85,13 @@ _HAD_MASK_FALLBACK = 0x9E3779B9
 # probability 1/SPARSE_S and takes values ±√SPARSE_S.  4 keeps √s exact
 # in float32 and the activation test a 2-bit mask compare.
 SPARSE_S = 4
+
+# Per-projection seed salt: block/projection ordinal j folds into the
+# round seed as ``splitmix32(seed ^ (PROJ_SALT + j))``.  Single source
+# for the jnp projection path, both Pallas kernels, the fused
+# reconstruct+apply megakernel and the mesh-sharded local bodies — the
+# shared direction chain starts here (DESIGN §6/§11).
+PROJ_SALT = 0xA511E9B3
 
 # Logical sub-block width for the (hi, lo) index split.  16 bits keeps
 # `hi` within uint32 up to d = 2**48 and makes the split cheap in both
@@ -174,6 +183,18 @@ def parity32(x: jax.Array) -> jax.Array:
     x = x ^ (x >> 2)
     x = x ^ (x >> 1)
     return x & _u32(1)
+
+
+def block_seed(seed, j) -> jax.Array:
+    """Per-projection/block seed: fold ordinal ``j`` into the round seed.
+
+    ``j`` may be a Python int or a traced uint32 scalar (the kernels
+    derive it from ``program_id``); the uint32 add wraps identically
+    either way, so every consumer of the direction chain — jnp
+    projection, Pallas kernels, fused megakernel, mesh shards — derives
+    the same per-block seed.
+    """
+    return splitmix32(_u32(seed) ^ (_u32(PROJ_SALT) + _u32(j)))
 
 
 def _sparse_rademacher_vals(seed, a, b) -> jax.Array:

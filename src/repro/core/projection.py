@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.prng import (
     Distribution,
+    block_seed,
     fold_seed,
     hash_u32,
     random_for_shape,
@@ -134,8 +135,8 @@ def _leaves(tree: Any):
 
 
 def _proj_seed(seed, j: int):
-    """Per-projection seed: fold the projection ordinal into the round seed."""
-    return splitmix32(jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(0xA511E9B3 + j))
+    """Per-projection seed — single source: :func:`repro.core.prng.block_seed`."""
+    return block_seed(seed, j)
 
 
 def _check_block_mask_domain(leaves) -> None:

@@ -196,10 +196,23 @@ class FedScalarProtocol(UplinkProtocol):
         return r
 
     def server_apply(self, params, payloads, seeds, weights, *,
-                     use_kernel: bool = False, mesh=None):
+                     use_kernel: bool = False, mesh=None,
+                     use_fused: bool = False,
+                     fused_params: dict | None = None):
         if mesh is not None:
             return fs.server_aggregate_mesh(
                 params, payloads, seeds, self.config, mesh, weights=weights)
+        if use_fused:
+            # The reconstruct+apply megakernel (chunk-batched spec);
+            # ``fused_params`` carries autotuned, bits-invariant knobs.
+            from repro.kernels import ops
+            fp = fused_params or {}
+            return ops.server_update_fused(
+                params, payloads, seeds, server_lr=self.config.server_lr,
+                distribution=self.config.distribution, weights=weights,
+                mode=self.config.mode,
+                block=tuple(fp["block"]) if fp.get("block") else None,
+                row_slab=fp.get("row_slab"))
         if use_kernel:
             from repro.kernels import ops
             return ops.server_update_kernel(

@@ -118,8 +118,12 @@ class RuntimeConfig:
     family: str | None = None           # direction family name (DESIGN §6);
                                         # overrides `distribution` when set
     num_projections: int = 1            # k scalars per upload
-    projection_mode: str = "full"       # "full" (m full-d projections) or
-                                        # "block" (k block scalars)
+    projection_mode: str = "full"       # "full" (m full-d projections),
+                                        # "block" (k block scalars), or
+                                        # "fused_kernel": block semantics
+                                        # (full at k=1) served by the fused
+                                        # reconstruct+apply megakernel
+                                        # (DESIGN §11; fedscalar only)
     qsgd_bits: int = 8                  # level-code width of the qsgd protocol
     seed: int = 0
     scalar_format: str = "fp32"         # wire width of r (fp32 | fp16 | bf16)
@@ -155,14 +159,26 @@ class RuntimeConfig:
             return get_family(self.family).distribution
         return self.distribution
 
-    def protocol(self) -> fs.FedScalarConfig:
+    def resolved_projection_mode(self):
+        """→ the :class:`ProjectionMode` behind the config string.
+
+        ``"fused_kernel"`` is a *routing* choice, not a new projection
+        semantics: uploads are the k block scalars (plain FULL at k=1);
+        only the server's decode runs the fused megakernel.
+        """
         from repro.core.projection import ProjectionMode
+        if self.projection_mode == "fused_kernel":
+            return (ProjectionMode.BLOCK if self.num_projections > 1
+                    else ProjectionMode.FULL)
+        return ProjectionMode(self.projection_mode)
+
+    def protocol(self) -> fs.FedScalarConfig:
         return fs.FedScalarConfig(
             local_steps=self.local_steps, local_lr=self.local_lr,
             server_lr=self.server_lr,
             distribution=self.resolved_distribution(),
             num_projections=self.num_projections,
-            mode=ProjectionMode(self.projection_mode))
+            mode=self.resolved_projection_mode())
 
     def wire(self) -> WireFormat:
         return WireFormat(scalar=self.scalar_format,
@@ -237,6 +253,7 @@ def _fused_method(cfg: RuntimeConfig, num_shards: int) -> str | None:
         and cfg.channel.base_latency_s == 0.0
         and cfg.scalar_format == "fp32"
         and cfg.server_lr == 1.0
+        and cfg.projection_mode != "fused_kernel"   # explicit kernel routing
     )
     if not base:
         return None
@@ -297,10 +314,11 @@ class StatefulClient:
 
     The replay is exact when client and server run the same reconstruct
     path: fori-loop and mesh-sharded applies are bitwise
-    interchangeable (DESIGN §7); the fused Pallas kernel differs by
-    ulps, so a deployment pins ``use_kernel`` consistently on both
-    sides (the engine's ``verify_replay`` shadow mirrors the server's
-    per-round choice).
+    interchangeable (DESIGN §7), and the fused reconstruct+apply
+    megakernel is bit-identical across its own lowerings (its chunked
+    spec, DESIGN §11) but differs by ulps from fori — so a deployment
+    pins the apply *method* consistently on both sides (the engine's
+    ``verify_replay`` shadow mirrors the server's per-round choice).
     """
 
     def __init__(self, params: Any, protocol, start_round: int = 0):
@@ -315,11 +333,20 @@ class StatefulClient:
         self._weighted_kernel = jax.jit(
             lambda p, r, s, w: protocol.server_apply(p, r, s, w,
                                                      use_kernel=True))
+        self._weighted_fused = jax.jit(
+            lambda p, r, s, w: protocol.server_apply(p, r, s, w,
+                                                     use_fused=True))
         self._mean = jax.jit(
             lambda p, r, s: protocol.server_apply(p, r, s, None))
 
-    def apply_digest(self, dg: RoundDigest, use_kernel: bool = False) -> Any:
-        """Replay one round's digest → the post-round parameters."""
+    def apply_digest(self, dg: RoundDigest,
+                     use_kernel: bool | str = False) -> Any:
+        """Replay one round's digest → the post-round parameters.
+
+        ``use_kernel`` mirrors the server's per-round apply method:
+        False/"fori", True/"kernel", or "fused" (the reconstruct+apply
+        megakernel) — the replay must run the identical numeric path.
+        """
         if dg.round_idx != self.next_round:
             raise ValueError(f"client holds x_{self.next_round}, cannot "
                              f"apply digest of round {dg.round_idx}")
@@ -331,18 +358,24 @@ class StatefulClient:
                                      jnp.asarray(dg.seeds))
         else:
             rs_b, w_b, seeds_b = _pad_bucket(dg.rs, dg.coeffs, dg.seeds)
-            fn = self._weighted_kernel if use_kernel else self._weighted
+            fn = {"fused": self._weighted_fused,
+                  "kernel": self._weighted_kernel,
+                  True: self._weighted_kernel}.get(use_kernel, self._weighted)
             self.params = fn(self.params, jnp.asarray(rs_b),
                              jnp.asarray(seeds_b), jnp.asarray(w_b))
         return self.params
 
-    def catch_up(self, log: RoundLog, server_params: Any = None) -> dict:
+    def catch_up(self, log: RoundLog, server_params: Any = None,
+                 use_kernel: bool | str = False) -> dict:
         """Sync to the log head: replay the suffix, or dense-resync.
 
         A gap beyond the log window means the suffix was evicted — the
         client takes one dense model sync (``server_params`` required)
-        exactly as the engine prices it.  → ``dict(mode, rounds_replayed,
-        suffix_bits)``.
+        exactly as the engine prices it.  ``use_kernel`` names the
+        server's apply method for the replayed rounds (see
+        :meth:`apply_digest`) — a client syncing to a
+        ``projection_mode="fused_kernel"`` server passes ``"fused"``.
+        → ``dict(mode, rounds_replayed, suffix_bits)``.
         """
         bits = log.suffix_bits(self.next_round)
         if bits is None:
@@ -356,7 +389,7 @@ class StatefulClient:
             return dict(mode="dense", rounds_replayed=0, suffix_bits=0)
         frames = log.replay(self.next_round)
         for dg in frames:
-            self.apply_digest(dg)
+            self.apply_digest(dg, use_kernel=use_kernel)
         return dict(mode="digest" if frames else "current",
                     rounds_replayed=len(frames), suffix_bits=bits)
 
@@ -456,6 +489,32 @@ class EngineCore:
                                           use_kernel=True)
 
             self.apply_fori, self.apply_kernel = apply_fori, apply_kernel
+
+            # Fused megakernel apply (projection_mode="fused_kernel"):
+            # the autotuner cache is consulted read-only for the
+            # dominant leaf's tuned tile/slab — a cache miss just means
+            # defaults (both knobs are bits-invariant, so tuned and
+            # untuned applies agree to the bit; DESIGN §11).
+            fused_params = None
+            if cfg.projection_mode == "fused_kernel":
+                from repro.kernels.tune import cached_fused_params
+                lead = max(jax.tree_util.tree_leaves(init_params),
+                           key=lambda x: x.size, default=None)
+                if lead is not None and lead.ndim:
+                    x2 = lead.reshape(-1, lead.shape[-1]) if lead.ndim > 1 \
+                        else lead.reshape(1, -1)
+                    fused_params = cached_fused_params(
+                        x2.shape[0], x2.shape[1], cfg.cohort_size(),
+                        cfg.num_projections,
+                        cfg.resolved_distribution().value)
+
+            @jax.jit
+            def apply_fused(params, rs, seeds, weights):
+                return proto.server_apply(params, rs, seeds, weights,
+                                          use_fused=True,
+                                          fused_params=fused_params)
+
+            self.apply_fused = apply_fused
         else:
             # Dense protocols: the uniform-mean path is the exact paper
             # aggregation (→ bit-identity with the core round functions on
@@ -548,11 +607,13 @@ class EngineCore:
     def apply_round(self, params, aseeds, acoeffs, ars, cohort_size: int, st):
         """Fold a closed round's buffers into the model.
 
-        → ``(params, use_kernel, apply_s)``; the apply choice (kernel /
-        fori / mesh / exact-mean) is made here once for both drivers.
+        → ``(params, method, apply_s)``; the apply choice — "fused" /
+        "kernel" / fori (False) / mesh / exact-mean — is made here once
+        for both drivers, and ``method`` is what the digest replay must
+        pin (it threads opaquely to :meth:`close_digest`).
         """
         a = len(aseeds)
-        use_kernel = False
+        use_kernel: bool | str = False
         apply_s = 0.0
         if a and not st.skipped:
             t_apply = time.time()
@@ -561,13 +622,19 @@ class EngineCore:
                 # mesh apply ≡ fori bitwise (DESIGN §7), so the shadow
                 # replay must NOT take the kernel path on mesh rounds —
                 # the kernel differs by ulps (DESIGN §9).
-                use_kernel = (self.mesh is None
-                              and self.kern_thresh is not None
-                              and a >= self.kern_thresh
-                              and (self.cfg.num_projections == 1
-                                   or self.cfg.projection_mode == "block"))
+                if (self.mesh is None
+                        and self.cfg.projection_mode == "fused_kernel"):
+                    use_kernel = "fused"
+                elif (self.mesh is None
+                        and self.kern_thresh is not None
+                        and a >= self.kern_thresh
+                        and (self.cfg.num_projections == 1
+                             or self.cfg.projection_mode == "block")):
+                    use_kernel = True
                 if self.mesh is not None:
                     applier = self.apply_mesh
+                elif use_kernel == "fused":
+                    applier = self.apply_fused
                 else:
                     applier = self.apply_kernel if use_kernel else self.apply_fori
                 params = applier(params, jnp.asarray(rs_b),
@@ -588,7 +655,7 @@ class EngineCore:
         return params, use_kernel, apply_s
 
     def close_digest(self, k: int, aseeds, acoeffs, ars, st, ids, params,
-                     use_kernel: bool) -> int:
+                     use_kernel: bool | str) -> int:
         """Digest-mode round close: broadcast the round's digest, mark
         the cohort synced, shadow-verify the replay → broadcast bits."""
         applied_round = bool(len(aseeds)) and not st.skipped

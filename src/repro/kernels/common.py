@@ -108,3 +108,68 @@ def gen_tile(seed_folded, row, col, distribution: str):
         bit = parity32((_u32(row) ^ t_r) & m_r) ^ parity32((_u32(col) ^ t_c) & m_c)
         return jnp.where(bit == 0, 1.0, -1.0).astype(jnp.float32)
     raise ValueError(distribution)
+
+
+# ---------------------------------------------------------------------------
+# Factored direction chain: the per-element hash split at its natural
+# seams.  ``hash_u32(s, row, col, tag)`` is three chained SplitMix32
+# rounds; the first depends only on the seed, the second only on
+# (seed, row).  ``row_state`` evaluates those two rounds once per
+# (seed, row) — over a column of a tile, or a whole (chunk, rows)
+# batch — and ``tile_from_state`` finishes with the single per-element
+# round (plus the family's value map).  Because this is a pure
+# re-bracketing of the *same* chain, values are bit-identical to
+# ``gen_tile`` / ``repro.core.prng.random_for_shape``; it exists so the
+# fused reconstruct+apply path and the projection kernel share one
+# generator whose per-element integer work is one SplitMix round, not
+# three (DESIGN §11).
+# ---------------------------------------------------------------------------
+
+
+def row_state(seed_folded, row, distribution: str) -> tuple:
+    """Hoisted per-(seed, row) chain state for ``tile_from_state``.
+
+    ``seed_folded`` and ``row`` broadcast against each other (e.g.
+    ``(cb, 1, 1)`` seeds × ``(1, R, 1)`` rows → ``(cb, R, 1)`` states).
+    """
+    s = _u32(seed_folded)
+    r = _u32(row)
+    if distribution in ("rademacher", "sparse_rademacher"):
+        return (splitmix32(splitmix32(s ^ _u32(_TAG_U1)) ^ r),)
+    if distribution == "gaussian":
+        return (splitmix32(splitmix32(s ^ _u32(_TAG_U1)) ^ r),
+                splitmix32(splitmix32(s ^ _u32(_TAG_U2)) ^ r))
+    if distribution == "hadamard":
+        m_r = splitmix32(s ^ _u32(_TAG_HAD_MR))
+        m_r = jnp.where(m_r == 0, _u32(_HAD_MASK_FALLBACK), m_r)
+        m_c = splitmix32(s ^ _u32(_TAG_HAD_MC))
+        m_c = jnp.where(m_c == 0, _u32(_HAD_MASK_FALLBACK), m_c)
+        t_r = splitmix32(s ^ _u32(_TAG_HAD_TR))
+        t_c = splitmix32(s ^ _u32(_TAG_HAD_TC))
+        return (parity32((r ^ t_r) & m_r), m_c, t_c)
+    raise ValueError(distribution)
+
+
+def tile_from_state(state: tuple, col, distribution: str):
+    """v values from a :func:`row_state` tuple and a broadcastable col."""
+    c = _u32(col)
+    if distribution == "rademacher":
+        bits = splitmix32(state[0] ^ c)
+        sign = (bits >> 8) & _u32(1)
+        return jnp.where(sign == 1, 1.0, -1.0).astype(jnp.float32)
+    if distribution == "gaussian":
+        u1 = uniform01(splitmix32(state[0] ^ c))
+        u2 = uniform01(splitmix32(state[1] ^ c))
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        return r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)
+    if distribution == "sparse_rademacher":
+        bits = splitmix32(state[0] ^ c)
+        active = (bits & _u32(SPARSE_S - 1)) == 0
+        sign = jnp.where((bits >> 8) & _u32(1) == 1, 1.0, -1.0)
+        return jnp.where(active, sign * jnp.float32(float(SPARSE_S) ** 0.5),
+                         jnp.float32(0.0))
+    if distribution == "hadamard":
+        pr, m_c, t_c = state
+        bit = pr ^ parity32((c ^ t_c) & m_c)
+        return jnp.where(bit == 0, 1.0, -1.0).astype(jnp.float32)
+    raise ValueError(distribution)

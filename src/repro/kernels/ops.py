@@ -34,6 +34,10 @@ from repro.core.directions import block_bounds, check_block_mask_domain
 from repro.core.prng import Distribution
 from repro.core.projection import ProjectionMode, _proj_seed, leaf_layout
 from repro.kernels.qsgd_quant import qsgd_kernel_call
+from repro.kernels.reconstruct_apply import (
+    DEFAULT_FUSED_BLOCK,
+    fused_reconstruct_apply,
+)
 from repro.kernels.seeded_projection import projection_blocks_kernel_call
 from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
 
@@ -43,6 +47,7 @@ __all__ = [
     "fold_upload_weights",
     "project_tree_kernel",
     "server_update_kernel",
+    "server_update_fused",
     "qsgd_roundtrip_kernel",
 ]
 
@@ -190,6 +195,73 @@ def server_update_kernel(
             x2d, seeds, rs, ll.tag, scale, _dist_name(distribution), block,
             interpret=interpret, lo=jnp.asarray(lo, jnp.float32),
             hi=jnp.asarray(hi, jnp.float32), orig_cols=cols, masked=masked)
+        out.append(y[:rows, :cols].reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _pick_fused_block(rows: int, cols: int) -> tuple:
+    """Largest fused tile ≤ DEFAULT_FUSED_BLOCK that the padded leaf fits."""
+    fbr, fbc = DEFAULT_FUSED_BLOCK
+    br = min(fbr, -(-rows // 8) * 8)
+    bc = min(fbc, -(-cols // 128) * 128)
+    return br, bc
+
+
+def server_update_fused(
+    params: Any,
+    rs: jax.Array,        # (N,), (N, 1) or (N, k) uploaded scalars
+    seeds: jax.Array,     # (N,) round seeds
+    server_lr: float = 1.0,
+    distribution: Distribution = Distribution.RADEMACHER,
+    interpret: bool | None = None,
+    weights: jax.Array | None = None,   # (N,) per-client aggregation weights
+    mode: ProjectionMode = ProjectionMode.FULL,
+    block_weights: jax.Array | None = None,   # (k,) per-block shrinkage
+    use_pallas: bool | None = None,
+    block: tuple | None = None,         # Pallas (br, bc) tile (tuned)
+    row_slab: int | None = None,        # mirror slab height (tuned)
+) -> Any:
+    """Fused-megakernel round close: same contract as server_update_kernel.
+
+    Routes every leaf through :func:`repro.kernels.reconstruct_apply.
+    fused_reconstruct_apply` — the chunk-batched numeric spec — instead
+    of the per-client fori kernel.  Results are allclose (not bitwise)
+    to ``server_update_kernel``/``server_update_ref``; the fused path's
+    own bitwise oracle is ``ref.server_update_fused_ref``.  ``block``/
+    ``row_slab`` take autotuned winners (``kernels.tune``); both are
+    bits-invariant.  The mirror path (CPU) runs leaves unpadded; the
+    Pallas path pads to the tile like the other kernels (exact).
+    """
+    rs, scale = fold_upload_weights(rs, server_lr, weights, mode, block_weights)
+    k = rs.shape[1]
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    layout = leaf_layout(params)
+    total = layout[-1].end if layout else 0
+    masked = mode == ProjectionMode.BLOCK and k > 1
+    out = []
+    for ll, leaf in zip(layout, leaves):
+        if leaf.ndim == 0:
+            x2d = leaf.reshape(1, 1)
+        elif leaf.ndim == 1:
+            x2d = leaf.reshape(1, -1)
+        else:
+            x2d = leaf.reshape(-1, leaf.shape[-1])
+        rows, cols = x2d.shape
+        blk = block
+        if use_pallas:
+            blk = blk or _pick_fused_block(rows, cols)
+            pr = (-rows) % blk[0]
+            pc = (-cols) % blk[1]
+            if pr or pc:
+                x2d = jnp.pad(x2d, ((0, pr), (0, pc)))
+        lo, hi = leaf_block_bounds(ll.offset, ll.size, total, k, mode)
+        y = fused_reconstruct_apply(
+            x2d, seeds, rs, ll.tag, scale, _dist_name(distribution),
+            block=blk or DEFAULT_FUSED_BLOCK, lo=jnp.asarray(lo, jnp.float32),
+            hi=jnp.asarray(hi, jnp.float32), orig_cols=cols, masked=masked,
+            use_pallas=use_pallas, interpret=interpret, row_slab=row_slab)
         out.append(y[:rows, :cols].reshape(leaf.shape))
     return jax.tree_util.tree_unflatten(treedef, out)
 

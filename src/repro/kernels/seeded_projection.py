@@ -41,7 +41,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import fold_seed, gen_tile, interpret_mode
+from repro.kernels.common import (
+    fold_seed,
+    interpret_mode,
+    row_state,
+    tile_from_state,
+)
 
 __all__ = ["projection_kernel_call", "projection_blocks_kernel_call",
            "DEFAULT_BLOCK"]
@@ -60,10 +65,17 @@ def _proj_kernel(seeds_ref, lo_ref, hi_ref, offs_ref, x_ref, o_ref, *,
     row_offset = offs_ref[0]
     col_offset = offs_ref[1]
 
-    row = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 0)
+    # Factored direction chain (common.row_state/tile_from_state): the
+    # first two SplitMix32 rounds run once per row on a (br, 1) column,
+    # the per-element round on broadcast against a (1, bc) col vector —
+    # values bit-identical to the old full-tile gen_tile, one mixer
+    # round per element instead of three (shared with the fused
+    # reconstruct+apply megakernel, DESIGN §11).
+    row = (jax.lax.broadcasted_iota(jnp.uint32, (br, 1), 0)
            + row_offset + pi.astype(jnp.uint32) * jnp.uint32(br))
-    col = (jax.lax.broadcasted_iota(jnp.uint32, (br, bc), 1)
+    col = (jax.lax.broadcasted_iota(jnp.uint32, (1, bc), 1)
            + col_offset + pj.astype(jnp.uint32) * jnp.uint32(bc))
+    st = row_state(seed_folded, row, distribution)
 
     @pl.when(jnp.logical_and(pi == 0, pj == 0))
     def _init():
@@ -73,7 +85,7 @@ def _proj_kernel(seeds_ref, lo_ref, hi_ref, offs_ref, x_ref, o_ref, *,
         # Paper k=1 path and FULL-mode multi-projections: every scalar
         # spans the whole leaf — no mask multiply (bit-identical k=1,
         # and no float32 flat-index domain limit).
-        v = gen_tile(seed_folded, row, col, distribution)
+        v = tile_from_state(st, col, distribution)
         o_ref[0, 0] += jnp.sum(x_ref[...].astype(jnp.float32) * v)
     else:
         # Skip (tile, block) pairs with provably empty intersection —
@@ -87,7 +99,7 @@ def _proj_kernel(seeds_ref, lo_ref, hi_ref, offs_ref, x_ref, o_ref, *,
 
         @pl.when(overlap)
         def _():
-            v = gen_tile(seed_folded, row, col, distribution)
+            v = tile_from_state(st, col, distribution)
             flat = (row.astype(jnp.float32) * jnp.float32(orig_cols)
                     + col.astype(jnp.float32))
             mask = jnp.logical_and(flat >= lo_ref[pb], flat < hi_ref[pb])

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.prng import PROJ_SALT
 from repro.kernels.common import fold_seed, gen_tile, interpret_mode, splitmix32
 
 __all__ = ["reconstruct_kernel_call", "CLIENT_CHUNK"]
@@ -52,8 +53,8 @@ __all__ = ["reconstruct_kernel_call", "CLIENT_CHUNK"]
 DEFAULT_BLOCK = (256, 512)
 CLIENT_CHUNK = 32     # cohort members regenerated per grid step
 
-# Per-projection seed salt — must match repro.core.projection._proj_seed.
-_PROJ_SALT = 0xA511E9B3
+# Per-projection seed salt — single source: repro.core.prng.
+_PROJ_SALT = PROJ_SALT
 
 
 def _rec_kernel(seeds_ref, rs_ref, scale_ref, lo_ref, hi_ref, offs_ref, x_ref,

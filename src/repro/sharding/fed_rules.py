@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.prng import Distribution
+from repro.core.prng import PROJ_SALT, Distribution
 from repro.core.projection import (
     LeafLayout,
     ProjectionMode,
@@ -66,9 +66,9 @@ __all__ = [
     "sharded_server_update",
 ]
 
-# Must match repro.core.projection._proj_seed / the kernels' in-kernel
-# per-block seed derivation.
-_PROJ_SALT = 0xA511E9B3
+# Single source: repro.core.prng.PROJ_SALT (the kernels' in-kernel
+# per-block seed derivation uses the same constant).
+_PROJ_SALT = PROJ_SALT
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +323,35 @@ def _local_reconstruct_kernel(x_local, seeds, rs, scale, leaf_tag,
     return y[:rl, :cl]
 
 
+def _local_reconstruct_fused(x_local, seeds, rs, scale, leaf_tag,
+                             row_offset, col_offset, distribution,
+                             lo, hi, orig_cols, masked, use_pallas):
+    """Fused reconstruct+apply local body (DESIGN §11).
+
+    The megakernel's chunked numeric spec is a pure function of global
+    (row, col), so the shard offsets compose exactly as they do for the
+    two-kernel path: any shard layout concatenates bit-identically to
+    the single-device fused call (``tests/test_kernel_differential.py``).
+    """
+    from repro.kernels.ops import _pick_fused_block
+    from repro.kernels.reconstruct_apply import fused_reconstruct_apply
+
+    rl, cl = x_local.shape
+    if use_pallas:
+        br, bc = _pick_fused_block(rl, cl)
+        pr, pc = (-rl) % br, (-cl) % bc
+        xp = jnp.pad(x_local, ((0, pr), (0, pc))) if pr or pc else x_local
+        y = fused_reconstruct_apply(
+            xp, seeds, rs, leaf_tag, scale, distribution, block=(br, bc),
+            row_offset=row_offset, col_offset=col_offset, lo=lo, hi=hi,
+            orig_cols=orig_cols, masked=masked, use_pallas=True)
+        return y[:rl, :cl]
+    return fused_reconstruct_apply(
+        x_local, seeds, rs, leaf_tag, scale, distribution,
+        row_offset=row_offset, col_offset=col_offset, lo=lo, hi=hi,
+        orig_cols=orig_cols, masked=masked, use_pallas=False)
+
+
 def _local_project_kernel(x_local, seeds, leaf_tag, row_offset, col_offset,
                           distribution, lo, hi, orig_cols, masked):
     from repro.kernels.ops import _pick_block
@@ -376,12 +405,18 @@ def sharded_apply_blocks(
     mode: ProjectionMode = ProjectionMode.FULL,
     block_weights: jax.Array | None = None,
     use_kernel: bool | None = None,
+    use_fused: bool = False,
 ) -> list[jax.Array]:
     """The decode core on pre-sharded views → updated views, still sharded.
 
     Outputs carry the same PartitionSpecs as the inputs, so feeding
     them back in keeps the model device-resident across rounds (zero
     parameter bytes moved per round — the DESIGN §7 HBM bill).
+
+    ``use_fused=True`` routes every local body through the fused
+    reconstruct+apply megakernel spec instead of the fori/kernel pair
+    (``use_kernel`` then picks Pallas vs the jnp mirror — same bits
+    either way, DESIGN §11).
     """
     from repro.kernels.ops import fold_upload_weights
 
@@ -399,6 +434,11 @@ def sharded_apply_blocks(
         out = []
         for ls, (lo, hi), xl in zip(plan.leaves, bounds, xs):
             ro, co = _offsets(ls, s)
+            if use_fused:
+                out.append(_local_reconstruct_fused(
+                    xl, seeds, rs, scale, ls.layout.tag, ro, co, dist,
+                    lo, hi, ls.layout.cols, masked, use_pallas=use_kernel))
+                continue
             body = _local_reconstruct_kernel if use_kernel \
                 else local_reconstruct_2d
             out.append(body(xl, seeds, rs, scale, ls.layout.tag, ro, co,
@@ -425,6 +465,7 @@ def sharded_server_update(
     block_weights: jax.Array | None = None,
     use_kernel: bool | None = None,
     plan: FedShardPlan | None = None,
+    use_fused: bool = False,
 ) -> Any:
     """Mesh-sharded Algorithm 1 lines 7–13: zero-collective decode.
 
@@ -444,7 +485,8 @@ def sharded_server_update(
     outs = sharded_apply_blocks(
         mesh, plan, to_sharded_2d(params, plan), rs, seeds,
         server_lr=server_lr, distribution=distribution, weights=weights,
-        mode=mode, block_weights=block_weights, use_kernel=use_kernel)
+        mode=mode, block_weights=block_weights, use_kernel=use_kernel,
+        use_fused=use_fused)
     return from_sharded_2d(outs, plan, params)
 
 

@@ -19,6 +19,11 @@ cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# Dtype-bits hygiene: the bitwise kernel-conformance suites assume
+# strict float32; an ambient x64 default would move bits (conftest.py
+# pins the same defaults for bare pytest runs).
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-0}"
+export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
 
 FULL=0
 ARGS=()

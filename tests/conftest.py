@@ -11,6 +11,16 @@ if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "
         "--xla_force_host_platform_device_count=8 "
         + os.environ.get("XLA_FLAGS", "")).strip()
 
+# Dtype-bits hygiene: the kernel-conformance suites assert *bitwise*
+# equality of float32 streams, which an ambient x64 default (or a
+# user's JAX_DEFAULT_DTYPE_BITS) would silently change — weak-typed
+# Python scalars would promote to f64 in the oracles but not inside
+# the Pallas kernels.  Pin both before jax initializes; an explicit
+# user-exported value wins (setdefault), matching the XLA_FLAGS pin
+# above and test.sh.
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+os.environ.setdefault("JAX_DEFAULT_DTYPE_BITS", "32")
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest  # noqa: E402

@@ -227,6 +227,37 @@ def test_fused_path_digest_trajectory_and_replay_bitidentical(digits8):
         n, 1, include_coeffs=False)
 
 
+@pytest.mark.parametrize("k", [1, 3])
+def test_fused_kernel_routing_digest_replay_bitidentical(k, digits8):
+    """projection_mode="fused_kernel" routes the round close through the
+    reconstruct+apply megakernel; digest replay stays exact.
+
+    The fused apply is a *different* float association than the fori
+    path, so a replaying client must use the same method — the engine
+    threads ``"fused"`` to its shadow client (``verify_replay=True``
+    asserts bit-identity in-run every round), and a fresh client passes
+    ``use_kernel="fused"`` to ``catch_up``.  k=1 exercises FULL-mode
+    routing, k=3 the masked BLOCK layout (``resolved_projection_mode``).
+    """
+    from repro.core.projection import ProjectionMode
+
+    clients, xte, yte = digits8
+    p0 = init_mlp()
+    cfg = RuntimeConfig(rounds=4, population=48, participation=0.25,
+                        eval_every=10**6, seed=3, num_projections=k,
+                        projection_mode="fused_kernel",
+                        downlink_mode="digest", downlink_log_window=8,
+                        verify_replay=True)
+    assert cfg.resolved_projection_mode() == (
+        ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL)
+    h = run_federation(cfg, p0, clients, xte, yte)
+    assert np.isfinite(h["loss"][-1])   # non-eval rounds hold NaN by design
+    client = StatefulClient(p0, cfg.build_protocol(p0))
+    info = client.catch_up(h["round_log"], use_kernel="fused")
+    assert info["mode"] == "digest" and info["rounds_replayed"] == 4
+    _assert_tree_equal(h["final_params"], client.params)
+
+
 def test_digest_replay_bitidentical_across_mesh_sharded_apply(digits8):
     """An unsharded client replays a mesh-sharded server bit-for-bit.
 

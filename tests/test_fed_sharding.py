@@ -88,6 +88,35 @@ def test_multi_shard_reconstruction_matches_single(fed_mesh, fed_mesh_single):
         assert np.array_equal(a, b)
 
 
+@pytest.mark.parametrize("dist,k,mode", [
+    (Distribution.RADEMACHER, 1, ProjectionMode.FULL),
+    (Distribution.HADAMARD, 3, ProjectionMode.BLOCK),
+])
+def test_sharded_fused_apply_matches_single_device(fed_mesh, dist, k, mode):
+    """Mesh-sharded fused apply ≡ the single-device fused path, bitwise.
+
+    ``use_fused=True`` routes every shard's local body through the
+    megakernel mirror with its global SMEM offsets; reconstruction is
+    elementwise in d, so the shard layout must not move a bit (the same
+    DESIGN §7 contract the two-kernel path pins, now for the fused
+    spec).  An awkward cohort (n=37, padded in-kernel to 48) and a
+    non-tile-aligned multi-leaf tree keep the padding paths honest.
+    """
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.asarray(rng.randn(40, 180), jnp.float32),
+              "b": jnp.asarray(rng.randn(100), jnp.float32)}
+    n = 37
+    seeds = jnp.asarray(rng.randint(0, 2**32, n, dtype=np.uint32))
+    rs = jnp.asarray(rng.randn(n, k).astype(np.float32))
+    many = fr.sharded_server_update(
+        fed_mesh, params, rs, seeds, 0.5, dist, mode=mode,
+        use_kernel=False, use_fused=True)
+    one = ops.server_update_fused(params, rs, seeds, 0.5, dist, mode=mode,
+                                  use_pallas=False)
+    for a, b in zip(_leaves(many), _leaves(one)):
+        assert np.array_equal(a, b)
+
+
 def test_sharded_projection_single_psum(fed_mesh):
     """Sharded encode ≡ full-width projection within the k-scalar psum's
     fp32 reassociation — the round's only collective.  Single 1-D leaf

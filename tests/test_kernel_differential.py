@@ -23,6 +23,7 @@ import pytest
 from repro.core.directions import FAMILIES
 from repro.core.projection import ProjectionMode, _proj_seed
 from repro.kernels import ops, ref
+from repro.kernels.reconstruct_apply import fused_reconstruct_apply
 from repro.kernels.seeded_projection import projection_blocks_kernel_call
 from repro.kernels.seeded_reconstruct import reconstruct_kernel_call
 
@@ -184,6 +185,157 @@ def test_offset_col_slices_bit_identical():
     call = jax.jit(lambda blk, co: reconstruct_kernel_call(
         blk, seeds, rs, 0, 1.0, "rademacher", block, col_offset=co,
         lo=lo, hi=hi, orig_cols=cols, masked=True))
+    per = cols // 4
+    parts = [call(x[:, i * per:(i + 1) * per], jnp.uint32(i * per))
+             for i in range(4)]
+    cat = np.concatenate([np.asarray(p) for p in parts], axis=1)
+    assert np.array_equal(cat, np.asarray(full))
+
+
+# ---------------------------------------------------------------------------
+# Fused reconstruct+apply megakernel: bit-identity to its jnp oracle
+# ---------------------------------------------------------------------------
+#
+# The fused kernel is its own numeric spec (chunk-batched reduction, scale
+# folded into the scalars — reconstruct_apply.py docstring), so the
+# contract against ref.server_update_fused_ref is **bitwise**; against the
+# legacy two-kernel composition (a different reduction association) it is
+# allclose only.
+
+def _fused_sweep(family, shapes, ks):
+    dist = FAMILIES[family].distribution
+    n = 5                                  # awkward: not a FUSED_CHUNK multiple
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 11
+    weights = jnp.asarray([2.0, 1.0, 0.5, 1.5, 3.0], jnp.float32)
+    for si, shape in enumerate(shapes):
+        tree = _tree(shape, 10 + si)
+        for k in ks:
+            mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+            rs = jnp.asarray(np.random.RandomState(k).randn(n, k), jnp.float32)
+            bw = (jnp.asarray(np.random.RandomState(k + 1).rand(k) + 0.5,
+                              jnp.float32) if k > 1 else None)
+            plain = None
+            for w in (None, weights):
+                uf = ops.server_update_fused(
+                    tree, rs, seeds, 0.5, dist, weights=w, mode=mode,
+                    block_weights=bw, use_pallas=False)
+                ur = ref.server_update_fused_ref(
+                    tree, rs, seeds, 0.5, dist, num_projections=k, mode=mode,
+                    weights=w, block_weights=bw)
+                np.testing.assert_array_equal(
+                    np.asarray(uf["x"]), np.asarray(ur["x"]),
+                    err_msg=f"{family} shape={shape} k={k} weighted={w is not None}")
+                if w is None:
+                    plain = uf
+            # cross-check against the legacy reduction order (allclose only)
+            ul = ref.server_update_ref(tree, rs, seeds, 0.5, dist,
+                                       num_projections=k, mode=mode,
+                                       block_weights=bw)
+            np.testing.assert_allclose(
+                np.asarray(plain["x"]), np.asarray(ul["x"]), rtol=1e-4,
+                atol=1e-4, err_msg=f"{family} shape={shape} k={k} (vs legacy)")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fused_differential_quick(family):
+    _fused_sweep(family, QUICK_SHAPES, QUICK_KS)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fused_differential_sweep(family):
+    _fused_sweep(family, AWKWARD_SHAPES, KS)
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+@pytest.mark.parametrize("k", [1, 4])
+def test_fused_pallas_interpret_bit_identical_to_mirror(family, k):
+    """Pallas lowering (interpret) ≡ the jnp mirror, bit for bit.
+
+    This is the pin that makes the mirror a trustworthy CPU stand-in for
+    the TPU kernel: both lowerings of the fused spec must produce the
+    same float32 stream (scale is pre-folded so no FMA-contraction
+    ambiguity survives — reconstruct_apply.py docstring).
+    """
+    dist = FAMILIES[family].distribution.value
+    rows, cols, block = 16, 256, (8, 128)
+    x = jnp.asarray(np.random.RandomState(3).randn(rows, cols), jnp.float32)
+    n = 5
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 2
+    rs = jnp.asarray(np.random.RandomState(4).randn(n, k), jnp.float32)
+    mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+    lo, hi = _leaf_bounds_full(rows, cols, k, mode)
+    masked = k > 1
+    mirror = fused_reconstruct_apply(
+        x, seeds, rs, 0, 0.25, dist, lo=lo, hi=hi, orig_cols=cols,
+        masked=masked, use_pallas=False)
+    pallas = fused_reconstruct_apply(
+        x, seeds, rs, 0, 0.25, dist, block=block, lo=lo, hi=hi,
+        orig_cols=cols, masked=masked, use_pallas=True, interpret=True)
+    assert np.array_equal(np.asarray(mirror), np.asarray(pallas)), (family, k)
+
+
+@pytest.mark.parametrize("row_slab", [8, 16, 64])
+def test_fused_row_slab_is_bits_invariant(row_slab):
+    """The mirror's row-slab tuning knob partitions space only — the
+    autotuner may pick any slab without moving a single output bit."""
+    rows, cols = 32, 192
+    x = jnp.asarray(np.random.RandomState(5).randn(rows, cols), jnp.float32)
+    n, k = 7, 3
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 9
+    rs = jnp.asarray(np.random.RandomState(6).randn(n, k), jnp.float32)
+    lo, hi = _leaf_bounds_full(rows, cols, k, ProjectionMode.BLOCK)
+    base = fused_reconstruct_apply(
+        x, seeds, rs, 0, 1.0, "rademacher", lo=lo, hi=hi, orig_cols=cols,
+        masked=True, use_pallas=False, row_slab=None)
+    slabbed = fused_reconstruct_apply(
+        x, seeds, rs, 0, 1.0, "rademacher", lo=lo, hi=hi, orig_cols=cols,
+        masked=True, use_pallas=False, row_slab=row_slab)
+    assert np.array_equal(np.asarray(base), np.asarray(slabbed))
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+@pytest.mark.parametrize("k", [1, 4])
+def test_fused_offset_shards_bit_identical(family, k):
+    """Mesh-shard contract for the fused kernel: row-sliced calls with
+    traced ``row_offset`` concatenate to the bit-exact full-width result."""
+    dist = FAMILIES[family].distribution.value
+    rows, cols = 32, 256
+    x = jnp.asarray(np.random.RandomState(7).randn(rows, cols), jnp.float32)
+    n = 4
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 3
+    rs = jnp.asarray(np.random.RandomState(8).randn(n, k), jnp.float32)
+    mode = ProjectionMode.BLOCK if k > 1 else ProjectionMode.FULL
+    lo, hi = _leaf_bounds_full(rows, cols, k, mode)
+    masked = k > 1
+    full = fused_reconstruct_apply(
+        x, seeds, rs, 0, 0.25, dist, lo=lo, hi=hi, orig_cols=cols,
+        masked=masked, use_pallas=False)
+    call = jax.jit(lambda blk, ro: fused_reconstruct_apply(
+        blk, seeds, rs, 0, 0.25, dist, row_offset=ro, lo=lo, hi=hi,
+        orig_cols=cols, masked=masked, use_pallas=False))
+    for s in (2, 4):
+        per = rows // s
+        parts = [call(x[i * per:(i + 1) * per], jnp.uint32(i * per))
+                 for i in range(s)]
+        cat = np.concatenate([np.asarray(p) for p in parts], axis=0)
+        assert np.array_equal(cat, np.asarray(full)), (family, k, s)
+
+
+def test_fused_offset_col_slices_bit_identical():
+    """Col-offset fused slices concatenate bit-exactly under jit too."""
+    rows, cols = 8, 512
+    x = jnp.asarray(np.random.RandomState(9).randn(rows, cols), jnp.float32)
+    n, k = 3, 4
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 1
+    rs = jnp.asarray(np.random.RandomState(10).randn(n, k), jnp.float32)
+    lo, hi = _leaf_bounds_full(rows, cols, k, ProjectionMode.BLOCK)
+    full = fused_reconstruct_apply(
+        x, seeds, rs, 0, 1.0, "rademacher", lo=lo, hi=hi, orig_cols=cols,
+        masked=True, use_pallas=False)
+    call = jax.jit(lambda blk, co: fused_reconstruct_apply(
+        blk, seeds, rs, 0, 1.0, "rademacher", col_offset=co, lo=lo, hi=hi,
+        orig_cols=cols, masked=True, use_pallas=False))
     per = cols // 4
     parts = [call(x[:, i * per:(i + 1) * per], jnp.uint32(i * per))
              for i in range(4)]

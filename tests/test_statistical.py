@@ -21,6 +21,9 @@ import numpy as np
 import pytest
 
 from repro.core import qsgd as q
+from repro.core.directions import FAMILIES
+from repro.core.projection import project_tree
+from repro.kernels import ops
 from repro.fed.costmodel import (
     ChannelConfig,
     CostModel,
@@ -341,3 +344,78 @@ def test_infinite_deadline_preserves_legacy_accounting(access):
     expect_wall = np.sum(ups) if access == "tdma" else np.max(ups)
     assert wall == pytest.approx(cm.t_other + expect_wall)
     assert energy == pytest.approx(2.0 * np.sum(ups - 0.1))
+
+
+# ---------------------------------------------------------------------------
+# Fused reconstruct+apply estimator: unbiasedness and the (d − 2 + κ) law
+# ---------------------------------------------------------------------------
+#
+# The scalar estimator rv (project with seed s, reconstruct with the SAME
+# seed through the fused megakernel) must satisfy, for unit ‖g‖:
+#
+#   E[rv] = g          and          E‖rv − g‖² = (d − 2 + κ)‖g‖²
+#
+# with κ the family's (effective) kurtosis (directions.py).  These runs go
+# through the *production* fused path — project_tree for the uplink scalar,
+# ops.server_update_fused for the reconstruction — so a bias introduced
+# anywhere in the seed chain, the scale fold, or the chunked reduction
+# shows up here even if the bit-identity suites (which compare fused
+# against its own oracle) stay green.
+#
+# Both tiers are deterministic (fixed seed ranges), so the tolerances are
+# calibrated, not probabilistic: at T=8192 every family sits within 2.8%
+# of the model (5% asserted); at T=1024 within ~6% (15% asserted).
+
+_FUSED_STAT_ROWS, _FUSED_STAT_COLS = 4, 32
+_FUSED_STAT_D = _FUSED_STAT_ROWS * _FUSED_STAT_COLS
+
+
+def _fused_estimates(family: str, trials: int) -> tuple[np.ndarray, np.ndarray]:
+    """(T, d) fused-path estimates of a fixed unit-norm target, and the target."""
+    fam = FAMILIES[family]
+    rng = np.random.RandomState(0)
+    g = rng.randn(_FUSED_STAT_ROWS, _FUSED_STAT_COLS)
+    g /= np.linalg.norm(g)
+    delta = jnp.asarray(g, jnp.float32)
+    zeros = {"w": jnp.zeros((_FUSED_STAT_ROWS, _FUSED_STAT_COLS), jnp.float32)}
+
+    def one(seed):
+        r = project_tree({"w": delta}, seed, fam.distribution)
+        up = ops.server_update_fused(zeros, r.reshape(1, 1), seed.reshape(1),
+                                     1.0, fam.distribution, use_pallas=False)
+        return up["w"]
+
+    est = jax.jit(jax.vmap(one))(jnp.arange(trials, dtype=jnp.uint32) + 7)
+    return np.asarray(est).reshape(trials, -1), g.ravel()
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fused_estimator_unbiased(family):
+    """E[rv] = g through the fused path (1024 fixed seeds, every family)."""
+    est, g = _fused_estimates(family, 1024)
+    err2 = float(np.sum((est.mean(axis=0) - g) ** 2))
+    # E‖mean − g‖² = (d − 2 + κ)/T for unit ‖g‖; allow 4× MC headroom
+    expected = FAMILIES[family].predicted_variance(
+        _FUSED_STAT_D, 1, total_sqnorm=1.0) / 1024
+    assert err2 < 4.0 * expected, (family, err2, expected)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fused_estimator_variance_matches_family_model_fast(family):
+    """E‖rv − g‖² tracks (d − 2 + κ)‖g‖² within 15% at T=1024 (fast tier)."""
+    est, g = _fused_estimates(family, 1024)
+    measured = float(np.mean(np.sum((est - g) ** 2, axis=1)))
+    predicted = FAMILIES[family].predicted_variance(
+        _FUSED_STAT_D, 1, total_sqnorm=1.0)
+    assert abs(measured / predicted - 1.0) < 0.15, (family, measured, predicted)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fused_estimator_variance_matches_family_model(family):
+    """E‖rv − g‖² = (d − 2 + κ)‖g‖² within 5% at T=8192 (slow tier)."""
+    est, g = _fused_estimates(family, 8192)
+    measured = float(np.mean(np.sum((est - g) ** 2, axis=1)))
+    predicted = FAMILIES[family].predicted_variance(
+        _FUSED_STAT_D, 1, total_sqnorm=1.0)
+    assert abs(measured / predicted - 1.0) < 0.05, (family, measured, predicted)
